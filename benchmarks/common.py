@@ -1,0 +1,76 @@
+"""Shared helpers for the paper-reproduction benchmarks.
+
+Every benchmark module exposes ``run() -> BenchResult``; ``benchmarks.run``
+orchestrates them and fails the process if any paper claim is violated.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+
+@dataclass
+class Claim:
+    """A quantitative claim made by the paper, checked by a benchmark."""
+    text: str                   # the claim, quoting the paper
+    value: float                # what the framework derives
+    lo: float                   # acceptance band
+    hi: float
+
+    @property
+    def ok(self) -> bool:
+        return self.lo <= self.value <= self.hi
+
+    def __str__(self) -> str:
+        mark = "PASS" if self.ok else "FAIL"
+        return (f"  [{mark}] {self.text}: derived {self.value:.3g} "
+                f"(accept [{self.lo:.3g}, {self.hi:.3g}])")
+
+
+@dataclass
+class BenchResult:
+    name: str
+    rows: List[Dict[str, Any]] = field(default_factory=list)
+    claims: List[Claim] = field(default_factory=list)
+    notes: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.claims)
+
+
+def fmt_table(rows: Sequence[Dict[str, Any]],
+              cols: Optional[Sequence[str]] = None) -> str:
+    if not rows:
+        return "  (no rows)"
+    if cols is None:
+        seen = {}
+        for r in rows:
+            for k in r:
+                seen.setdefault(k, None)
+        cols = list(seen)
+    else:
+        cols = list(cols)
+    def cell(v: Any) -> str:
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+    data = [[cell(r.get(c, "")) for c in cols] for r in rows]
+    widths = [max(len(c), *(len(d[i]) for d in data))
+              for i, c in enumerate(cols)]
+    out = ["  " + "  ".join(c.ljust(w) for c, w in zip(cols, widths))]
+    out.append("  " + "  ".join("-" * w for w in widths))
+    for d in data:
+        out.append("  " + "  ".join(x.ljust(w) for x, w in zip(d, widths)))
+    return "\n".join(out)
+
+
+def print_result(res: BenchResult, cols: Optional[Sequence[str]] = None
+                 ) -> None:
+    print(f"\n=== {res.name} ===")
+    print(fmt_table(res.rows, cols))
+    for n in res.notes:
+        print(f"  note: {n}")
+    for c in res.claims:
+        print(c)

@@ -1,0 +1,47 @@
+"""Paper Fig. 4 — single-device 3-year carbon footprint: embodied vs
+operational breakdown and absolute totals.
+
+Claims checked (paper §4.2):
+* edge-device footprint is dominated by embodied carbon (>80 % for the
+  mobile device),
+* operational carbon is significant for the data-center GPU,
+* the data-center GPU has at least an order of magnitude higher absolute
+  footprint than the laptop (for ~5x the compute capability).
+"""
+
+from __future__ import annotations
+
+from repro.core.carbon.offload import fig4_table
+
+from benchmarks.common import BenchResult, Claim
+
+
+def run() -> BenchResult:
+    res = BenchResult("Fig. 4: 3-year embodied/operational breakdown")
+    fps = fig4_table()
+    for name, fp in fps.items():
+        res.rows.append({
+            "device": name,
+            "embodied_kg": fp.embodied_kg,
+            "operational_kg": fp.operational_kg,
+            "total_kg": fp.total_kg,
+            "embodied_%": fp.embodied_pct,
+        })
+
+    phone = fps["smartphone-sd888"]
+    laptop = fps["laptop-m2pro"]
+    h100 = fps["cloud-h100"]
+
+    res.claims.append(Claim("mobile footprint >80% embodied",
+                            phone.embodied_pct, 80.0, 100.0))
+    res.claims.append(Claim("laptop footprint mostly embodied",
+                            laptop.embodied_pct, 60.0, 100.0))
+    res.claims.append(Claim("DC GPU operational share significant (>40%)",
+                            100.0 - h100.embodied_pct, 40.0, 100.0))
+    res.claims.append(Claim(
+        "DC GPU total >= 10x laptop total (order of magnitude)",
+        h100.total_kg / laptop.total_kg, 10.0, 100.0))
+    res.claims.append(Claim(
+        "H100/M2 compute ratio ~5x (267 vs 53 TFLOPS, paper's basis)",
+        267.0 / 53.0, 4.5, 5.5))
+    return res

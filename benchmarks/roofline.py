@@ -1,0 +1,150 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads every ``experiments/dryrun/*_pod.json`` record and derives the three
+roofline terms per (arch × shape) on the single-pod 16x16 v5e mesh:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s        [s]
+    memory     = HLO_bytes_per_chip / HBM_bw             [s]
+    collective = collective_bytes_per_chip / link_bw     [s]
+
+Conventions:
+* cost_analysis() and the HLO text are PER-DEVICE under SPMD, so the
+  per-chip terms divide by per-chip peaks only (no further /chips).
+* train records multiply by the microbatch trip count (recorded by the
+  dry-run as *_corrected) — XLA's cost analysis counts while bodies once.
+* MODEL_FLOPS = 6·N(_active)·D for train, 2·N·D prefill, 2·N_active·B
+  decode (+ attention/SSD terms), from ``repro.core.flops``; the ratio
+  MODEL/HLO exposes remat & redundancy waste.
+
+Writes ``experiments/roofline.json`` consumed by EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+from repro.configs.registry import get_config, input_shape
+from repro.core import flops as F
+from repro.core.energy.devices import TPU_V5E
+
+from benchmarks.common import BenchResult, Claim
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "roofline.json"
+
+PEAK = TPU_V5E.peak_flops          # 197e12 bf16
+HBM = TPU_V5E.hbm_bw_Bps           # 819e9
+LINK = TPU_V5E.link_bw_Bps         # 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global useful FLOPs for one step of (arch, shape).
+
+    whisper-medium lowers with its TRUE geometry (1500-frame encoder,
+    448-token decoder; see DESIGN.md §4) — the analytic side must match:
+    the decoder sees seq 448 and cross-attends 1500 encoder positions.
+    """
+    cfg = get_config(arch)
+    s = input_shape(shape_name)
+    seq = s.seq_len
+    if cfg.is_encoder_decoder:
+        seq = cfg.max_target_positions                       # 448
+        # cross-attention + encoder self-attention extra flops
+        enc_tokens = s.global_batch * cfg.encoder_seq_len
+        xattn = (2.0 * seq * cfg.encoder_seq_len * cfg.d_model * 2
+                 * cfg.num_layers * s.global_batch)
+    else:
+        xattn = 0.0
+    if s.kind == "train":
+        base = F.train_flops(cfg, s.global_batch, seq, remat=False)
+        return base + 3.0 * xattn
+    if s.kind == "prefill":
+        return F.fwd_flops(cfg, s.global_batch, seq) + xattn
+    cache = seq if cfg.is_encoder_decoder else s.seq_len
+    dec = F.decode_flops(cfg, s.global_batch, cache)
+    if cfg.is_encoder_decoder:
+        # per-token cross-attention reads the full encoder KV
+        dec += (2.0 * cfg.encoder_seq_len * cfg.d_model * 2
+                * cfg.num_layers * s.global_batch)
+    return dec
+
+
+def mitigation(dom: str, kind: str) -> str:
+    return {
+        "compute": "compute-bound is the roofline goal; raise MFU via larger "
+                   "per-chip tiles / fewer remat recomputes",
+        "memory": "cut bytes: fuse attention (chunked/flash), bf16 optimizer "
+                  "moments, avoid materialized S x S scores",
+        "collective": "reshard: move FSDP all-gathers off the critical path, "
+                      "overlap with compute, or trade TP degree for DP",
+    }[dom]
+
+
+def analyse(rec: Dict[str, Any]) -> Dict[str, Any]:
+    arch, shape_name = rec["arch"], rec["shape"]
+    # prefer the trip-count-aware HLO walk; fall back to cost_analysis
+    flops_dev = rec.get("hlo_flops_per_device",
+                        rec.get("flops_per_device_corrected",
+                                rec["flops_per_device"]))
+    bytes_dev = rec.get("hlo_bytes_per_device",
+                        rec.get("bytes_accessed_corrected",
+                                rec["bytes_accessed_per_device"]))
+    coll_dev = rec["collectives"]["total_bytes"]
+
+    t_c = flops_dev / PEAK
+    t_m = bytes_dev / HBM
+    t_x = coll_dev / LINK
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+
+    mf = model_flops(arch, shape_name)
+    hlo_global = flops_dev * rec["chips"]
+    return {
+        "arch": arch, "shape": shape_name, "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "bound_step_s": max(t_c, t_m, t_x),
+        "mfu_upper_bound": mf / (rec["chips"] * PEAK * max(t_c, t_m, t_x))
+        if max(t_c, t_m, t_x) > 0 else 0.0,
+        "mitigation": mitigation(dom, rec["kind"]),
+    }
+
+
+def load_records(suffix: str = "_pod.json") -> List[Dict[str, Any]]:
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob(f"*{suffix}")):
+        stem = p.name[: -len(suffix)]
+        # skip variant records (extra underscore-tagged runs)
+        if any(stem.endswith(x) for x in ("_full_float32_default",)):
+            continue
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run() -> BenchResult:
+    res = BenchResult("Roofline: per (arch x shape) terms, 16x16 v5e pod")
+    rows = []
+    for rec in load_records():
+        a = analyse(rec)
+        rows.append(a)
+        res.rows.append({
+            "arch": a["arch"], "shape": a["shape"],
+            "compute_s": a["compute_s"], "memory_s": a["memory_s"],
+            "collective_s": a["collective_s"], "dominant": a["dominant"],
+            "useful": a["useful_ratio"], "mfu_ub": a["mfu_upper_bound"],
+        })
+    OUT.write_text(json.dumps(rows, indent=1))
+
+    res.claims.append(Claim("all 33 applicable (arch x shape) pairs lowered "
+                            "and analysed", float(len(rows)), 33, 33))
+    n_train = sum(1 for r in rows if r["kind"] == "train")
+    res.claims.append(Claim("every arch has a train_4k baseline",
+                            float(n_train), 10, 10))
+    res.notes.append(f"terms written to {OUT}")
+    return res

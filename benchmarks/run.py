@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Each module derives the paper's numbers from the framework's analytic
+substrate and checks the paper's quantitative claims; the process exits
+non-zero if any claim fails.  The roofline module additionally consumes
+the multi-pod dry-run artifacts (deliverable g).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (compress_ablation, fig2_scaling, fig3_idealized,
+                        fig4_breakdown, fig5_offload, roofline, sched_carbon,
+                        table1_single_device, table2_dtfm)
+from benchmarks.common import print_result
+
+MODULES = {
+    "table1": table1_single_device,
+    "table2": table2_dtfm,
+    "fig2": fig2_scaling,
+    "fig3": fig3_idealized,
+    "fig4": fig4_breakdown,
+    "fig5": fig5_offload,
+    "sched": sched_carbon,
+    "compress": compress_ablation,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(MODULES))
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(MODULES)
+    failures = []
+    for name in names:
+        t0 = time.time()
+        res = MODULES[name].run()
+        dt = time.time() - t0
+        print_result(res)
+        print(f"  ({dt:.1f}s)")
+        if not res.ok:
+            failures.append(name)
+
+    print("\n==== SUMMARY ====")
+    for name in names:
+        print(f"  {name:10s} {'FAIL' if name in failures else 'PASS'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

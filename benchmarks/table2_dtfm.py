@@ -1,0 +1,65 @@
+"""Paper Table 2 — distributed DT-FM training energy, OPT-1.3B.
+
+Setting (paper §4.2): same data/hyperparameters as Table 1 (100 steps,
+batch 16, seq 512); fleet sizes fixed by the paper — 4 laptops or 15
+smartphones hold all parameters + training state; 10 MB/s symmetric
+bandwidth, 0.5 W WiFi module [82].
+
+Paper's measured energies: cloud GPU 152 Wh, 4 laptops 27 Wh,
+15 smartphones 98 Wh -> distributed edge training is 1.5-5x more
+energy-efficient than one cloud GPU *even with* communication energy.
+"""
+
+from __future__ import annotations
+
+from repro.configs.opt import opt_config
+from repro.core import flops as F
+from repro.core.energy.devices import (CLOUD_A5000, LAPTOP_M2PRO,
+                                       SMARTPHONE_SD888, train_energy_wh)
+from repro.core.planner import dtfm
+
+from benchmarks.common import BenchResult, Claim
+
+STEPS, BATCH, SEQ = 100, 16, 512
+PAPER = {"cloud-a5000": 152.0, "laptop-m2pro": 27.0,
+         "smartphone-sd888": 98.0}
+FLEET = {"laptop-m2pro": (LAPTOP_M2PRO, 4),
+         "smartphone-sd888": (SMARTPHONE_SD888, 15)}
+
+
+def run() -> BenchResult:
+    cfg = opt_config("opt-1.3b")
+    res = BenchResult("Table 2: DT-FM distributed energy (OPT-1.3B)")
+
+    total = F.train_flops(cfg, BATCH, SEQ, remat=False) * STEPS
+    e_cloud = train_energy_wh(CLOUD_A5000, total)
+    res.rows.append({"fleet": "1x cloud-a5000", "energy_wh": e_cloud,
+                     "paper_wh": PAPER["cloud-a5000"],
+                     "err_%": 100 * abs(e_cloud - PAPER["cloud-a5000"])
+                     / PAPER["cloud-a5000"]})
+    res.claims.append(Claim("cloud GPU energy ≈ paper (152 Wh)",
+                            e_cloud / PAPER["cloud-a5000"], 0.9, 1.1))
+
+    for name, (dev, n) in FLEET.items():
+        out = dtfm.table2_energy(cfg, dev, n, batch=BATCH, seq_len=SEQ,
+                                 steps=STEPS)
+        e = out["energy_wh"]
+        res.rows.append({"fleet": f"{n}x {name}", "energy_wh": e,
+                         "paper_wh": PAPER[name],
+                         "err_%": 100 * abs(e - PAPER[name]) / PAPER[name],
+                         "bubble": out["bubble_fraction"],
+                         "comm_s_per_step": out["comm_s_per_step"]})
+        res.claims.append(Claim(f"{n}x {name} energy ≈ paper "
+                                f"({PAPER[name]} Wh)", e / PAPER[name],
+                                0.75, 1.25))
+        # the paper's own numbers give 152/27 = 5.6x (laptops) and
+        # 152/98 = 1.55x (phones); accept the compounded per-fleet model
+        # error (each fleet is reproduced within 25% above)
+        res.claims.append(Claim(
+            f"{n}x {name}: 1.5-5x more efficient than cloud GPU "
+            "(paper's numbers imply 1.55-5.6x)",
+            e_cloud / e, 1.4, 8.0))
+    res.notes.append("DT-FM plan: compute-weighted contiguous layer split, "
+                     "GPipe makespan incl. bubble, stage-boundary activations"
+                     " + WiFi energy at 10 MB/s / 0.5 W [82]")
+    return res

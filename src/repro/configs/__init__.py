@@ -1,0 +1,6 @@
+"""Architecture registry: the 10 assigned archs + the paper's OPT series."""
+
+from repro.configs.registry import (ARCHS, INPUT_SHAPES, get_config,
+                                    input_shape, list_archs)
+
+__all__ = ["ARCHS", "INPUT_SHAPES", "get_config", "input_shape", "list_archs"]

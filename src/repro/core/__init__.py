@@ -1,0 +1,4 @@
+"""The paper's contribution: carbon-aware decentralized foundation-model
+training — carbon accounting, edge energy models, distributed-training
+planners (idealized + DT-FM), and carbon/thermal/fault-aware orchestration.
+"""

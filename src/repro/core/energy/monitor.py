@@ -1,0 +1,103 @@
+"""Component-level energy monitoring (§5: "holistic, reliable and efficient
+energy consumption monitoring").
+
+The paper's proposed direction: accurate component-level energy MODELS that
+infer fine-grained consumption, with coarse-grained measurements used for
+periodic CALIBRATION.  Implemented here:
+
+* ``ComponentModel`` — per-op energy from first principles: compute J/FLOP,
+  memory J/byte, network J/byte (the 0.001 kWh/GB WAN / 0.02 kWh/GB local
+  figures from §5 are the defaults),
+* ``EnergyMonitor``  — accumulates per-component estimates per training
+  step and recalibrates a global scale factor whenever a coarse measurement
+  (e.g. a battery/wall-meter reading) arrives — the calibration loop the
+  paper asks for.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+# §5: WAN transmission ~0.001 kWh/GB; "local computation >= 0.02 kWh/GB"
+# (the paper's per-GB *processing* figure, used for comm-vs-compute
+# trade-offs, NOT a memory-access energy).  Memory access itself is
+# ~100-150 pJ/byte on LPDDR5/HBM — the component model uses that.
+WAN_J_PER_BYTE = 0.001 * 3.6e6 / 1e9        # 3.6e-6 J/B
+LOCAL_PROCESS_J_PER_BYTE = 0.02 * 3.6e6 / 1e9
+MEM_J_PER_BYTE = 1.2e-10                    # ~120 pJ/byte (LPDDR5 class)
+
+
+@dataclass(frozen=True)
+class ComponentModel:
+    compute_j_per_flop: float          # P_active / effective_flops
+    hbm_j_per_byte: float = MEM_J_PER_BYTE
+    net_j_per_byte: float = WAN_J_PER_BYTE
+    static_w: float = 0.5              # always-on rail
+
+    @classmethod
+    def for_device(cls, device) -> "ComponentModel":
+        return cls(compute_j_per_flop=device.power_active_w
+                   / device.effective_flops,
+                   static_w=device.power_idle_w)
+
+
+@dataclass
+class StepSample:
+    flops: float
+    hbm_bytes: float
+    net_bytes: float
+    duration_s: float
+
+
+@dataclass
+class EnergyMonitor:
+    model: ComponentModel
+    scale: float = 1.0                 # calibration factor
+    samples: List[StepSample] = field(default_factory=list)
+    estimates_j: List[float] = field(default_factory=list)
+
+    def record_step(self, *, flops: float, hbm_bytes: float = 0.0,
+                    net_bytes: float = 0.0, duration_s: float = 0.0
+                    ) -> float:
+        """Returns the (calibrated) energy estimate for this step, J."""
+        m = self.model
+        e = (flops * m.compute_j_per_flop
+             + hbm_bytes * m.hbm_j_per_byte
+             + net_bytes * m.net_j_per_byte
+             + duration_s * m.static_w)
+        e *= self.scale
+        self.samples.append(StepSample(flops, hbm_bytes, net_bytes,
+                                       duration_s))
+        self.estimates_j.append(e)
+        return e
+
+    def calibrate(self, measured_j: float, window: int = 0) -> float:
+        """Align the model to a coarse measurement over the last ``window``
+        steps (0 = all).  Returns the new scale factor."""
+        est = self.estimates_j[-window:] if window else self.estimates_j
+        if not est or sum(est) == 0:
+            return self.scale
+        raw = sum(est) / self.scale
+        self.scale = measured_j / raw
+        self.estimates_j = [e / (sum(est) / measured_j) for e in est] \
+            if window == 0 else self.estimates_j
+        return self.scale
+
+    @property
+    def total_j(self) -> float:
+        return sum(self.estimates_j)
+
+    @property
+    def total_wh(self) -> float:
+        return self.total_j / 3600.0
+
+    def breakdown_j(self) -> Dict[str, float]:
+        m = self.model
+        out = {"compute": 0.0, "memory": 0.0, "network": 0.0, "static": 0.0}
+        for s in self.samples:
+            out["compute"] += s.flops * m.compute_j_per_flop * self.scale
+            out["memory"] += s.hbm_bytes * m.hbm_j_per_byte * self.scale
+            out["network"] += s.net_bytes * m.net_j_per_byte * self.scale
+            out["static"] += s.duration_s * m.static_w * self.scale
+        return out

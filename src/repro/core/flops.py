@@ -1,0 +1,146 @@
+"""Analytic FLOP / byte models — single source of truth for the paper's
+energy analyses (§4.2) and the roofline compute/memory terms.
+
+Conventions (stated in EXPERIMENTS.md):
+
+* train step     : 6·N·D  (+ attention term 12·L·S²·H·hd·(1/2 causal) x3)
+* prefill        : 2·N·D  (+ attention term x1)
+* decode (1 tok) : 2·N_active·B (+ cache-read attention term)
+
+N counts *active* parameters for MoE (the 6·N_active·D convention).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+
+def _attn_flops_per_seq(cfg: ModelConfig, S: int, causal: bool = True) -> float:
+    """QK^T + PV flops for one sequence, all attention layers."""
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.layer_kind(i) == "attn")
+    if cfg.attention == "mla":
+        qk_dim = cfg.mla.qk_head_dim
+        v_dim = cfg.mla.v_head_dim
+    else:
+        qk_dim = v_dim = cfg.resolved_head_dim
+    H = cfg.num_heads
+    per_layer = 2.0 * S * S * H * (qk_dim + v_dim)
+    if cfg.sliding_window and S > cfg.sliding_window:
+        per_layer *= cfg.sliding_window / S          # SWA cuts the window
+    elif causal:
+        per_layer *= 0.5
+    return n_attn * per_layer
+
+
+def _ssd_flops_per_seq(cfg: ModelConfig, S: int) -> float:
+    """SSD chunked-scan flops for one sequence, all SSM layers."""
+    if not cfg.ssm.enabled:
+        return 0.0
+    n_ssm = sum(1 for i in range(cfg.num_layers)
+                if cfg.layer_kind(i) == "ssm")
+    ssm = cfg.ssm
+    d_in = ssm.d_inner(cfg.d_model)
+    n = ssm.d_state
+    Q = ssm.chunk_size
+    # per chunk ~ 2(Q²n·g→heads + Q²p + 2Qpn) per head-dim partition; use
+    # the dominant terms: CBᵀ (Q²n), L·X (Q²p), state in/out (2Qpn)
+    h = ssm.num_heads(cfg.d_model)
+    p = ssm.head_dim
+    per_head_chunk = 2.0 * (Q * Q * n + Q * Q * p + 2 * Q * p * n)
+    return n_ssm * h * (S / Q) * per_head_chunk
+
+
+def fwd_flops(cfg: ModelConfig, batch: int, seq_len: int) -> float:
+    n_active = cfg.active_param_count()
+    tokens = batch * seq_len
+    return (2.0 * n_active * tokens
+            + batch * _attn_flops_per_seq(cfg, seq_len)
+            + batch * _ssd_flops_per_seq(cfg, seq_len))
+
+
+def train_flops(cfg: ModelConfig, batch: int, seq_len: int,
+                remat: bool = True) -> float:
+    """fwd + bwd (2x fwd) [+ recompute fwd if remat]."""
+    mult = 4.0 if remat else 3.0
+    return mult * fwd_flops(cfg, batch, seq_len) / 1.0
+
+
+def decode_flops(cfg: ModelConfig, batch: int, cache_len: int) -> float:
+    n_active = cfg.active_param_count()
+    # attention: q·Kᵀ + p·V over the cache (linear in cache_len)
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.layer_kind(i) == "attn")
+    if cfg.attention == "mla":
+        per_tok_attn = 2.0 * cache_len * cfg.num_heads * (
+            cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * 2
+    else:
+        hd = cfg.resolved_head_dim
+        w = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+            else cache_len
+        per_tok_attn = 2.0 * w * cfg.num_heads * 2 * hd
+    ssm_step = 0.0
+    if cfg.ssm.enabled:
+        n_ssm = sum(1 for i in range(cfg.num_layers)
+                    if cfg.layer_kind(i) == "ssm")
+        ssm_step = n_ssm * 6.0 * cfg.ssm.num_heads(cfg.d_model) \
+            * cfg.ssm.head_dim * cfg.ssm.d_state
+    return batch * (2.0 * n_active + n_attn * per_tok_attn + ssm_step)
+
+
+def param_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    return cfg.param_count() * dtype_bytes
+
+
+def train_state_bytes(cfg: ModelConfig, param_dtype: int = 2,
+                      moment_dtype: int = 4) -> float:
+    """weights + grads + two Adam moments."""
+    n = cfg.param_count()
+    return n * (param_dtype + 4 + 2 * moment_dtype)
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, cache_len: int,
+                   dtype_bytes: int = 2) -> float:
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.layer_kind(i) == "attn")
+    if cfg.attention == "mla":
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+    else:
+        per_tok = 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+        if cfg.sliding_window:
+            cache_len = min(cache_len, cfg.sliding_window)
+    total = n_attn * batch * cache_len * per_tok * dtype_bytes
+    if cfg.ssm.enabled:
+        ssm = cfg.ssm
+        n_ssm = sum(1 for i in range(cfg.num_layers)
+                    if cfg.layer_kind(i) == "ssm")
+        total += n_ssm * batch * 4 * (
+            ssm.num_heads(cfg.d_model) * ssm.head_dim * ssm.d_state)
+    return total
+
+
+def activation_bytes(cfg: ModelConfig, batch: int, seq_len: int,
+                     dtype_bytes: int = 2) -> float:
+    """Layer-boundary activations (what the idealized DAG method transmits)."""
+    return cfg.num_layers * batch * seq_len * cfg.d_model * dtype_bytes
+
+
+def decode_hbm_bytes(cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype_bytes: int = 2) -> float:
+    """Weights read once + cache read once per decode step."""
+    return (cfg.active_param_count() * dtype_bytes
+            + kv_cache_bytes(cfg, batch, cache_len, dtype_bytes))
+
+
+def summary(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, float]:
+    return {
+        "params": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "train_flops": train_flops(cfg, batch, seq_len),
+        "fwd_flops": fwd_flops(cfg, batch, seq_len),
+        "param_bytes_bf16": param_bytes(cfg),
+        "train_state_bytes": train_state_bytes(cfg),
+    }

@@ -1,0 +1,80 @@
+"""Fault-tolerance strategy trade-offs (§5: checkpointing vs replication vs
+recomputation pose "trade-offs between carbon footprint and recovery
+latency... identifying Pareto-optimal strategies").
+
+Model: device failures/departures are Poisson with rate λ per device; a
+training run of W wall-seconds over N devices sees N·λ·W interruptions.
+
+* checkpoint(interval I): overhead = ckpt_cost·W/I;  loss per failure = I/2
+* replication(r):         overhead = (r-1)·100% compute; loss ≈ 0
+* recomputation:          overhead = 0 steady-state; loss per failure =
+                          full stage recompute (pipeline-depth dependent)
+
+``pareto_frontier`` enumerates strategies and returns the non-dominated set
+in (expected slowdown, carbon overhead) space.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+
+@dataclass(frozen=True)
+class FaultModel:
+    lambda_per_device_hour: float   # departure/failure rate
+    num_devices: int
+    step_time_s: float
+    ckpt_write_s: float             # time to write a checkpoint
+    ckpt_restore_s: float
+    stage_recompute_s: float        # recomputation cost per failure
+
+
+@dataclass(frozen=True)
+class StrategyOutcome:
+    name: str
+    slowdown: float                 # expected wall-clock multiplier (>=1)
+    energy_overhead: float          # extra energy fraction (>=0)
+
+    def dominates(self, other: "StrategyOutcome") -> bool:
+        return (self.slowdown <= other.slowdown
+                and self.energy_overhead <= other.energy_overhead
+                and (self.slowdown < other.slowdown
+                     or self.energy_overhead < other.energy_overhead))
+
+
+def checkpoint_outcome(fm: FaultModel, interval_steps: int) -> StrategyOutcome:
+    lam_s = fm.lambda_per_device_hour * fm.num_devices / 3600.0
+    interval_s = interval_steps * fm.step_time_s
+    write_frac = fm.ckpt_write_s / interval_s
+    # expected rework per failure = half an interval + restore
+    rework_per_failure = interval_s / 2.0 + fm.ckpt_restore_s
+    failure_frac = lam_s * rework_per_failure
+    slow = 1.0 + write_frac + failure_frac
+    return StrategyOutcome(f"checkpoint@{interval_steps}", slow, slow - 1.0)
+
+
+def replication_outcome(fm: FaultModel, replicas: int = 2) -> StrategyOutcome:
+    # hot standby: compute duplicated, failures nearly free
+    lam_s = fm.lambda_per_device_hour * fm.num_devices / 3600.0
+    residual = lam_s * fm.ckpt_restore_s * 0.1
+    return StrategyOutcome(f"replicate-x{replicas}", 1.0 + residual,
+                           float(replicas - 1) + residual)
+
+
+def recompute_outcome(fm: FaultModel) -> StrategyOutcome:
+    lam_s = fm.lambda_per_device_hour * fm.num_devices / 3600.0
+    failure_frac = lam_s * fm.stage_recompute_s
+    slow = 1.0 + failure_frac
+    return StrategyOutcome("recompute", slow, slow - 1.0)
+
+
+def pareto_frontier(fm: FaultModel,
+                    ckpt_intervals: Sequence[int] = (10, 50, 100, 500),
+                    ) -> List[StrategyOutcome]:
+    cands = [checkpoint_outcome(fm, i) for i in ckpt_intervals]
+    cands.append(replication_outcome(fm))
+    cands.append(recompute_outcome(fm))
+    frontier = [c for c in cands
+                if not any(o.dominates(c) for o in cands if o is not c)]
+    return sorted(frontier, key=lambda s: s.slowdown)

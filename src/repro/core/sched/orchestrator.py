@@ -1,0 +1,221 @@
+"""Discrete-event orchestration simulator for edge training (§5).
+
+Simulates a training run over a dynamic edge fleet:
+
+* devices join/leave (Poisson churn — "dynamic device participation"),
+* thermal throttling via the RC model (per-device state),
+* carbon-aware admission (only devices under the gCO2e/GFLOP threshold and
+  in clean-energy windows join the active set),
+* fault tolerance by periodic checkpointing (rework on failure),
+* per-step energy/carbon ledger (compute + stall + comm + rework).
+
+Deterministic given the seed (numpy RNG) — the simulator IS the system's
+orchestration logic, exercised by tests and examples, not a visualization
+toy.  Time advances step-by-step; each step reassigns the DT-FM plan if
+membership changed (the paper's "preemptible execution and fast state
+recovery" loop).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import flops as F
+from repro.core.carbon.accounting import CarbonLedger
+from repro.core.carbon.intensity import IntensityTrace
+from repro.core.planner import dtfm
+from repro.core.sched.carbon_aware import FleetDevice, carbon_rate
+from repro.core.sched.thermal import ThermalState
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class SimConfig:
+    total_steps: int = 200
+    batch: int = 16
+    seq_len: int = 512
+    microbatches: int = 32
+    checkpoint_interval: int = 50
+    ckpt_write_s: float = 20.0
+    ckpt_restore_s: float = 30.0
+    churn_leave_per_hour: float = 0.2      # per active device
+    churn_join_per_hour: float = 0.5       # per idle candidate
+    carbon_threshold_g_per_gflop: float = float("inf")
+    start_hour_utc: float = 9.0
+    seed: int = 0
+
+
+@dataclass
+class SimResult:
+    steps_done: int
+    wall_time_s: float
+    energy_wh: float
+    carbon_kg: float
+    rework_steps: int
+    membership_changes: int
+    mean_active_devices: float
+    throughput_steps_per_hour: float
+    trace: List[Dict] = field(default_factory=list)
+
+
+class Orchestrator:
+    def __init__(self, cfg: ModelConfig, fleet: Sequence[FleetDevice],
+                 sim: SimConfig):
+        self.cfg = cfg
+        self.fleet = list(fleet)
+        self.sim = sim
+        self.rng = np.random.default_rng(sim.seed)
+        self.thermals = {d.device_id: ThermalState(d.thermal_params())
+                         for d in self.fleet}
+        self.active: List[FleetDevice] = []
+        self.ledger = CarbonLedger()
+        self.traces: Dict[str, IntensityTrace] = {}
+
+    # ------------------------------------------------------------ membership
+    def _admit(self, hour: float) -> int:
+        """Carbon-aware admission; returns number of membership changes."""
+        changes = 0
+        active_ids = {d.device_id for d in self.active}
+        for d in self.fleet:
+            rate, _ = carbon_rate(d, hour, self.traces)
+            ok = d.charging and rate <= self.sim.carbon_threshold_g_per_gflop
+            if ok and d.device_id not in active_ids:
+                # idle candidate joins with prob churn_join per hour
+                if self.rng.random() < self.sim.churn_join_per_hour / 3600.0 \
+                        * self._dt or not self.active:
+                    self.active.append(d)
+                    changes += 1
+            elif not ok and d.device_id in active_ids:
+                self.active = [a for a in self.active
+                               if a.device_id != d.device_id]
+                changes += 1
+        return changes
+
+    def _depart(self) -> int:
+        leave_p = self.sim.churn_leave_per_hour / 3600.0 * self._dt
+        stay = []
+        changes = 0
+        for d in self.active:
+            if self.rng.random() < leave_p and len(self.active) > 1:
+                changes += 1
+            else:
+                stay.append(d)
+        self.active = stay
+        return changes
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SimResult:
+        sim, cfg = self.sim, self.cfg
+        step_flops = F.train_flops(cfg, sim.batch, sim.seq_len, remat=False)
+        t = 0.0
+        steps = 0
+        rework = 0
+        changes = 0
+        energy_wh = 0.0
+        active_sum = 0.0
+        iterations = 0
+        last_ckpt_step = 0
+        self._dt = 1.0
+        trace: List[Dict] = []
+
+        # initial admission
+        hour = sim.start_hour_utc
+        self._dt = 3600.0
+        changes += self._admit(hour)
+        if not self.active:
+            self.active = [self.fleet[0]]
+
+        while steps < sim.total_steps:
+            hour = (sim.start_hour_utc + t / 3600.0) % 24.0
+            members_before = {d.device_id for d in self.active}
+
+            # throughput with thermal derating
+            eff = 0.0
+            for d in self.active:
+                ts = self.thermals[d.device_id]
+                perf = ts.perf_factor()
+                eff += d.spec.effective_flops * perf
+            plan = dtfm.plan(cfg, [d.spec for d in self.active],
+                             batch=sim.batch, seq_len=sim.seq_len,
+                             microbatches=sim.microbatches)
+            # scale plan step time by thermal derate of slowest member
+            derate = min(self.thermals[d.device_id].perf_factor()
+                         for d in self.active)
+            step_s = plan.step_time_s / max(derate, 1e-6)
+            self._dt = step_s
+
+            # advance thermals under load
+            for d in self.active:
+                self.thermals[d.device_id].step(d.spec.power_active_w, step_s)
+            for d in self.fleet:
+                if d.device_id not in {a.device_id for a in self.active}:
+                    self.thermals[d.device_id].step(0.5, step_s)
+
+            # energy + carbon for this step
+            e_wh = plan.total_energy_wh_per_step / max(derate, 1e-6)
+            energy_wh += e_wh
+            ci = self.traces.setdefault(
+                self.active[0].region,
+                IntensityTrace(self.active[0].region)).at_hour(hour)
+            self.ledger.add_operational_wh(f"step{steps}", e_wh,
+                                           intensity=ci)
+
+            # checkpoint overhead
+            if steps - last_ckpt_step >= sim.checkpoint_interval:
+                t += sim.ckpt_write_s
+                last_ckpt_step = steps
+
+            # churn
+            changes_now = self._depart() + self._admit(hour)
+            changes += changes_now
+            if changes_now and {d.device_id
+                                for d in self.active} != members_before:
+                # failure/departure: roll back to last checkpoint
+                lost = min(steps - last_ckpt_step,
+                           sim.checkpoint_interval) // 2
+                rework += lost
+                steps = max(last_ckpt_step, steps - lost)
+                t += sim.ckpt_restore_s
+
+            t += step_s
+            steps += 1
+            active_sum += len(self.active)
+            iterations += 1
+            if steps % 20 == 0:
+                trace.append({"step": steps, "t_s": round(t, 1),
+                              "active": len(self.active),
+                              "derate": round(derate, 3),
+                              "ci": round(ci, 3)})
+
+        return SimResult(
+            steps_done=steps,
+            wall_time_s=t,
+            energy_wh=energy_wh,
+            carbon_kg=self.ledger.operational_kg,
+            rework_steps=rework,
+            membership_changes=changes,
+            mean_active_devices=active_sum / max(iterations, 1),
+            throughput_steps_per_hour=steps / (t / 3600.0) if t else 0.0,
+            trace=trace,
+        )
+
+
+def make_fleet(spec_counts: Dict[str, int], *, regions=("europe",),
+               seed: int = 0) -> List[FleetDevice]:
+    from repro.core.energy.devices import CATALOG
+    rng = np.random.default_rng(seed)
+    fleet = []
+    i = 0
+    for name, count in spec_counts.items():
+        for _ in range(count):
+            fleet.append(FleetDevice(
+                spec=CATALOG[name],
+                region=regions[i % len(regions)],
+                tz_offset=float(rng.integers(-6, 7)),
+                charging=bool(rng.random() < 0.8),
+                device_id=i))
+            i += 1
+    return fleet

@@ -1,0 +1,214 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Every parameter carries logical axis names (see ``repro.models.params``);
+a *rule table* maps logical axes to mesh axes.  The engine enforces the two
+GSPMD constraints that otherwise bite at scale:
+
+* a mesh axis may appear at most once per PartitionSpec (first dim wins),
+* a dim is only sharded if its size divides the mesh-axis extent —
+  otherwise it silently falls back to replication (recorded for roofline
+  honesty via :func:`sharding_report`).
+
+Default strategy = FSDP over ``data`` (embed dim of every weight) combined
+with Megatron tensor parallelism over ``model`` (heads / mlp / vocab /
+experts).  The ``pod`` axis is pure data parallelism: params are replicated
+across pods and gradients all-reduce over DCN, the standard multi-pod
+pattern.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+# logical axis -> candidate mesh axes (first that fits wins)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "embed": ("data",),          # FSDP / ZeRO-3 weight sharding
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head": (),
+    "mlp": ("model",),
+    "experts": ("model", "data"),   # expert parallelism; full EP when the
+                                    # expert count covers model x data
+                                    # (deepseek 256e on 256 chips)
+    "mamba_inner": ("model",),
+    "mamba_heads": ("model",),
+    "state": (),
+    "q_rank": ("model",),
+    "kv_rank": ("model",),
+    "layers": (),
+    "batch": ("pod", "data"),
+    "seq": (),
+}
+
+# Tensor-parallel-only variant (no FSDP): small models / serving
+TP_ONLY_RULES = dict(DEFAULT_RULES, embed=())
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                  mesh: Mesh, rules: Dict[str, Tuple[str, ...]]) -> P:
+    used: set = set()
+    parts: List[Optional[Tuple[str, ...]]] = []
+    for dim, name in zip(shape, axes):
+        if name is None or name not in rules:
+            parts.append(None)
+            continue
+        chosen: List[str] = []
+        extent = 1
+        for mx in rules[name]:
+            if mx in used or mx not in mesh.shape:
+                continue
+            if dim % (extent * mesh.shape[mx]) == 0:
+                chosen.append(mx)
+                extent *= mesh.shape[mx]
+        for mx in chosen:
+            used.add(mx)
+        parts.append(tuple(chosen) if chosen else None)
+    return P(*parts)
+
+
+def param_shardings(cfg, mesh: Mesh,
+                    rules: Optional[Dict[str, Tuple[str, ...]]] = None
+                    ) -> PyTree:
+    """NamedSharding tree matching ``models.params`` structure."""
+    from repro.models import params as PM
+    rules = dict(rules or DEFAULT_RULES)
+    # expert weights must match the dispatch layout (models.moe):
+    # full EP shards experts over model x data; otherwise experts shard
+    # over model only and keep FSDP (embed over data) on the hidden dims.
+    if getattr(cfg, "moe", None) and cfg.moe.enabled \
+            and cfg.moe.layout != "ep_full":
+        rules["experts"] = ("model",)
+    spec_tree = PM.model_spec(cfg)
+
+    def leaf(s: PM.ParamSpec):
+        return NamedSharding(mesh, spec_for_axes(s.axes, s.shape, mesh, rules))
+    return jax.tree.map(leaf, spec_tree,
+                        is_leaf=lambda x: isinstance(x, PM.ParamSpec))
+
+
+def sharding_report(cfg, mesh: Mesh,
+                    rules: Optional[Dict[str, Tuple[str, ...]]] = None
+                    ) -> Dict[str, Any]:
+    """Bytes/device + which params fell back to replication (honesty check)."""
+    from repro.models import params as PM
+    rules = rules or DEFAULT_RULES
+    spec_tree = PM.model_spec(cfg)
+    total = 0
+    replicated = 0
+    fallbacks: List[str] = []
+    for path, s in jax.tree.flatten_with_path(
+            spec_tree, is_leaf=lambda x: isinstance(x, PM.ParamSpec))[0]:
+        spec = spec_for_axes(s.axes, s.shape, mesh, rules)
+        shard_factor = 1
+        for p_ in spec:
+            if p_ is None:
+                continue
+            names = (p_,) if isinstance(p_, str) else p_
+            for nm in names:
+                shard_factor *= mesh.shape[nm]
+        bytes_ = s.size() * (4 if s.init in ("ssm_a", "dt_bias") else 2)
+        total += bytes_ // shard_factor
+        if shard_factor == 1 and s.size() > 1_000_000:
+            replicated += bytes_
+            fallbacks.append(jax.tree_util.keystr(path))
+    return {"param_bytes_per_device": total,
+            "replicated_large_param_bytes": replicated,
+            "replicated_params": fallbacks}
+
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    """Shard the global batch over (pod, data) as divisibility allows."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    chosen: List[str] = []
+    extent = 1
+    for a in axes:
+        if batch_size % (extent * mesh.shape[a]) == 0:
+            chosen.append(a)
+            extent *= mesh.shape[a]
+    return P(tuple(chosen) if chosen else None)
+
+
+def batch_shardings(mesh: Mesh, batch: Dict[str, jax.Array | jax.ShapeDtypeStruct]
+                    ) -> Dict[str, NamedSharding]:
+    """Input shardings for a train/prefill batch dict."""
+    out = {}
+    for k, v in batch.items():
+        if k == "positions" and v.ndim == 3:          # (3, B, S) M-RoPE
+            bs = v.shape[1]
+            spec = batch_spec(mesh, bs)
+            out[k] = NamedSharding(mesh, P(None, *spec))
+        else:
+            bs = v.shape[0]
+            spec = batch_spec(mesh, bs)
+            rest = (None,) * (v.ndim - 1)
+            out[k] = NamedSharding(mesh, P(*spec, *rest))
+    return out
+
+
+def cache_shardings(cfg, mesh: Mesh, cache: PyTree, batch_size: int) -> PyTree:
+    """KV/SSM cache shardings for decode.
+
+    batch >= data extent: shard batch dim.  batch == 1 (long-context):
+    shard the *sequence* dim of attention caches over ``data`` —
+    context-parallel decode; SSM states shard over heads via ``model``.
+    """
+    from repro.models import params as PM
+    daxes = [a for a in ("pod", "data") if a in mesh.shape]
+    dsize = math.prod(mesh.shape[a] for a in daxes)
+    shard_batch = batch_size % dsize == 0
+    depths = {f"g{gi}": g.depth
+              for gi, g in enumerate(PM.decoder_groups(cfg))}
+
+    msize = mesh.shape.get("model", 1)
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        key = jax.tree_util.keystr(path)
+        gkey = key.split("'")[1] if "'" in key else "g0"
+        stacked = depths.get(gkey, 1) > 1                      # leading layers axis
+        off = 1 if stacked else 0
+        parts: List[Any] = [None] * len(shape)
+        if shard_batch:
+            parts[off] = tuple(daxes)
+        is_seq_cache = ("latent" in key or "k_rope" in key
+                        or (len(shape) - off == 4
+                            and ("'k'" in key or "'v'" in key)))
+        if is_seq_cache:
+            # sequence-shard the cache: over model always (flash-decoding
+            # partial-softmax merge), and over data too when batch can't
+            T = shape[off + 1]
+            seq_axes: List[str] = []
+            extent = 1
+            if "model" in mesh.shape and T % msize == 0:
+                seq_axes.append("model")
+                extent = msize
+            if not shard_batch:
+                dext = math.prod(mesh.shape[a] for a in daxes)
+                if T % (extent * dext) == 0:
+                    seq_axes += daxes
+            if seq_axes:
+                parts[off + 1] = tuple(seq_axes)
+        elif "state" in key and len(shape) - off == 4:         # SSM state
+            nh = shape[off + 1]
+            if "model" in mesh.shape and nh % msize == 0:
+                parts[off + 1] = "model"
+        elif "conv" in key and len(shape) - off == 3:
+            ch = shape[off + 2]
+            if "model" in mesh.shape and ch % msize == 0:
+                parts[off + 2] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,206 @@
+"""XLA-level flash attention: chunked online softmax with a custom VJP.
+
+This is the *compile-analyzable* twin of the Pallas kernel: identical
+algorithm (stream KV in chunks, fp32 running max/sum, O(S) residuals:
+out + logsumexp), expressed in pure jnp so that (a) the multi-pod dry-run
+HLO reflects flash memory behaviour on every backend and (b) CPU tests run
+fast.  The backward pass recomputes per-chunk scores from (q,k,v,out,lse)
+— the Dao et al. flash-attention-2 recipe.
+
+The Pallas kernel (kernel.py) is the TPU execution path; this module is the
+default for training/dry-run lowering and is validated against ref.py in
+the same sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+DEFAULT_CHUNK = 512
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int, seq_len: int):
+    ok = k_pos[None, :] < seq_len
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return ok
+
+
+def _constrain5(x):
+    """(B, K, g, S, *) — model-axis priority: kv-heads, then head-groups,
+    then query rows.  ``constrain`` pins the FIRST dim the model extent
+    divides and leaves the rest unconstrained, so every architecture gets
+    its attention compute sharded 1/TP-way:
+
+    * K % TP == 0 (MHA, wide GQA)      -> head-parallel, kv sharded
+    * g % TP == 0 (llama3: 8kv x 16g)  -> group-parallel, kv replicated
+    * S % TP == 0 (anything else)      -> q-row-parallel, kv replicated
+
+    Without this GSPMD replicates heads across the model axis (measured:
+    16x redundant attention flops on granite train_4k — see EXPERIMENTS.md
+    §Perf #1)."""
+    from repro.distributed.act_sharding import BATCH, MODEL, constrain
+    return constrain(x, BATCH, MODEL, MODEL, MODEL, None)
+
+
+def _constrain4(x):
+    from repro.distributed.act_sharding import BATCH, MODEL, constrain
+    return constrain(x, BATCH, MODEL, MODEL, MODEL)
+
+
+def _constrain_kv(x):
+    """(B, K, T, D) stacked-chunk kv: shard kv-heads over model when they
+    divide; otherwise kv stays replicated over model (each q shard reads
+    the full kv), which is the correct GQA/TP>K layout."""
+    from repro.distributed.act_sharding import BATCH, MODEL, constrain
+    return constrain(x, BATCH, MODEL, None, None)
+
+
+def _fwd(q, k, v, causal, window, scale, chunk, true_len):
+    """q: (B,K,g,S,D); k/v: (B,K,T,D) — input dtype (bf16 in production),
+    f32 running stats/accumulator (flash-attention-2 mixed precision).
+    Returns out (f32), (m, l)."""
+    B, K, g, S, D = q.shape
+    T = k.shape[2]
+    nc = T // chunk
+    q_pos = jnp.arange(S)
+
+    q = _constrain5(q)
+    k = _constrain_kv(k)
+    v = _constrain_kv(v)
+    kc = k.reshape(B, K, nc, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, K, nc, chunk, v.shape[-1]).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kci, vci = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bkgsd,bktd->bkgst", q, kci,
+                       preferred_element_type=jnp.float32) * scale
+        s = _constrain5(s)
+        ok = _mask(q_pos, k_pos, causal, window, true_len)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,bktd->bkgsd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32)
+        return (_constrain4(m_new), _constrain4(l), _constrain5(acc)), None
+
+    m0 = _constrain4(jnp.full((B, K, g, S), NEG_INF, jnp.float32))
+    l0 = _constrain4(jnp.zeros((B, K, g, S), jnp.float32))
+    a0 = _constrain5(jnp.zeros((B, K, g, S, v.shape[-1]), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nc), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _chunked_core(q, k, v, causal, window, scale, chunk, true_len):
+    out, _ = _fwd(q, k, v, causal, window, scale, chunk, true_len)
+    return out
+
+
+def _core_fwd(q, k, v, causal, window, scale, chunk, true_len):
+    out, lse = _fwd(q, k, v, causal, window, scale, chunk, true_len)
+    return out, (q, k, v, out, lse)
+
+
+def _core_bwd(causal, window, scale, chunk, true_len, res, dout):
+    q, k, v, out, lse = res
+    B, K, g, S, D = q.shape
+    T = k.shape[2]
+    nc = T // chunk
+    q_pos = jnp.arange(S)
+    delta = jnp.sum(dout * out, axis=-1)                   # (B,K,g,S)
+
+    k = _constrain_kv(k)
+    v = _constrain_kv(v)
+    kc = k.reshape(B, K, nc, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, K, nc, chunk, v.shape[-1]).transpose(2, 0, 1, 3, 4)
+
+    def body(dq, inp):
+        ci, kci, vci = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bkgsd,bktd->bkgst", q, kci,
+                       preferred_element_type=jnp.float32) * scale
+        s = _constrain5(s)
+        ok = _mask(q_pos, k_pos, causal, window, true_len)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                    # (B,K,g,S,t) f32
+        pc = p.astype(q.dtype)
+        dv_c = jnp.einsum("bkgst,bkgsd->bktd", pc, dout,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bkgsd,bktd->bkgst", dout, vci,
+                        preferred_element_type=jnp.float32)
+        dp = _constrain5(dp)
+        ds = (p * (dp - delta[..., None]) * scale).astype(q.dtype)
+        dq = dq + jnp.einsum("bkgst,bktd->bkgsd", ds, kci,
+                             preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bkgst,bkgsd->bktd", ds, q,
+                          preferred_element_type=jnp.float32)
+        return _constrain5(dq), (dk_c, dv_c)
+
+    dq0 = _constrain5(jnp.zeros(q.shape, jnp.float32))
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (jnp.arange(nc), kc, vc))
+    dk = dk_c.transpose(1, 2, 0, 3, 4).reshape(B, K, T, D)
+    dv = dv_c.transpose(1, 2, 0, 3, 4).reshape(B, K, T, v.shape[-1])
+    # cotangents must match primal dtypes (custom_vjp contract): the f32
+    # accumulators cast back to the (bf16) input dtype here
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_chunked_core.defvjp(_core_fwd, _core_bwd)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      scale: Optional[float] = None,
+                      chunk: int = DEFAULT_CHUNK) -> jax.Array:
+    """Flash attention, (B,S,H,D) layout, GQA via K/V head groups."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    # GQA/TP layout: if the merged head count divides the model axis but
+    # neither K nor g does (e.g. granite 32 = 8kv x 4g on TP16), expand kv
+    # to H heads BEFORE the (K, g) split so the K dim carries the model
+    # axis.  Per-device kv SHRINKS (H/TP < K heads held), attention stays
+    # head-parallel end-to-end, and no head<->seq resharding is inserted
+    # (measured: granite train_4k all-gather 1.6 TiB/dev -> see §Perf #2).
+    from repro.distributed.act_sharding import axis_extent
+    tp = axis_extent("model")
+    if tp > 1 and g > 1 and H % tp == 0 and K % tp and g % tp:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        K, g = H, 1
+
+    c = min(chunk, T)
+    pad = (-T) % c
+    kk, vv = k, v
+    if pad:
+        kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # keep q/k/v in their input dtype (bf16 in production): the matmuls
+    # accumulate in f32 via preferred_element_type and the running stats
+    # are f32 — FA2 mixed precision; upcasting inputs here doubled the
+    # attention HBM traffic for no accuracy gain (§Perf A3)
+    qf = q.reshape(B, S, K, g, D).transpose(0, 2, 3, 1, 4)
+    kf = kk.transpose(0, 2, 1, 3)
+    vf = vv.transpose(0, 2, 1, 3)
+    out = _chunked_core(qf, kf, vf, causal, window, float(scale), c, T)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, v.shape[-1])
+    return out.astype(q.dtype)

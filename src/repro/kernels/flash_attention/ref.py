@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / GQA)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,T,K,D), H % K == 0.  fp32 softmax."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qf = q.reshape(B, S, K, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)
+    k_pos = jnp.arange(T)
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    logits = logits + jnp.where(ok, 0.0, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,49 @@
+"""Public wrappers: quantize/dequantize arbitrary-shape arrays (pads tail)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant8.kernel import dequantize_blocks, quantize_blocks
+from repro.kernels.quant8 import ref as qref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantize(x: jax.Array, block: int = 256, *, interpret=None
+             ) -> Tuple[jax.Array, jax.Array, Tuple[int, ...]]:
+    """Any-shape tensor -> (int8 flat, scales, original shape)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    rows = flat.shape[0] // block
+    if rows % min(256, rows):   # irregular row count: fall back to the oracle
+        q, s = qref.quantize_reference(flat, block)
+    else:
+        q, s = quantize_blocks(flat, block=block, interpret=interpret)
+    return q, s, shape
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape: Tuple[int, ...],
+               block: int = 256, dtype=jnp.float32, *, interpret=None
+               ) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    rows = q.shape[0] // block
+    if rows % min(256, rows):
+        flat = qref.dequantize_reference(q, scale, block, dtype)
+    else:
+        flat = dequantize_blocks(q, scale, block=block, dtype=dtype,
+                                 interpret=interpret)
+    import numpy as np
+    n = int(np.prod(shape))
+    return flat[:n].reshape(shape)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for blockwise symmetric int8 quantization.
+
+Gradient-compression primitive for the paper's §5 communication-minimization
+challenge (ZeRO++/QSDP-style quantized collectives): values are quantized
+per contiguous block of ``block`` elements with a shared fp32 scale.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_reference(x: jax.Array, block: int = 256
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """x: (N,) with N % block == 0 -> (int8 values (N,), fp32 scales (N/block,))."""
+    xb = x.astype(jnp.float32).reshape(-1, block)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def dequantize_reference(q: jax.Array, scale: jax.Array, block: int = 256,
+                         dtype=jnp.float32) -> jax.Array:
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    return (qb * scale[:, None]).reshape(-1).astype(dtype)

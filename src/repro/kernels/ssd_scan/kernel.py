@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid = (batch, heads, chunks); the chunk dimension is sequential on TPU, so
+the inter-chunk SSM state (head_dim × d_state, fp32) lives in VMEM scratch
+and is carried across chunk iterations — the HBM-resident inputs stream in
+one (chunk × head_dim) / (chunk × d_state) tile at a time.
+
+Per chunk (Q = chunk length, all fp32 in VREGs/MXU):
+  dA   = dt · A                       (Q,)       log-decay
+  L    = exp(segsum(dA)) ∘ causal     (Q, Q)
+  y    = ((C Bᵀ) ∘ L) (x·dt)          intra-chunk   — two MXU matmuls
+       + (C ∘ exp(cumsum dA)) Sᵀ      inter-chunk   — one MXU matmul
+  S'   = exp(ΣdA) · S + ((B ∘ decay)ᵀ (x·dt))ᵀ      — state update
+
+Grouped B/C (n_groups < heads) is expressed in the BlockSpec index_map
+(head h reads group h // rep), mirroring the GQA trick in flash attention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)            # (Q, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)          # (Q, 1)
+    A = a_ref[0].astype(jnp.float32)               # scalar decay rate
+    B = b_ref[0, 0].astype(jnp.float32)            # (Q, n)
+    C = c_ref[0, 0].astype(jnp.float32)            # (Q, n)
+
+    xd = x * dt                                    # discretized input
+    dA = dt[:, 0] * A                              # (Q,)
+    cs = jnp.cumsum(dA)                            # inclusive cumsum
+
+    # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = cs[:, None] - cs[None, :]
+    L = jnp.where(li >= lj, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)   # (Q,Q)
+    y = jax.lax.dot(scores * L, xd, preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    decay_out = jnp.exp(cs)[:, None]               # (Q,1)
+    state = state_scr[...]                         # (p, n)
+    y = y + jax.lax.dot_general(C * decay_out, state,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: S' = exp(sum dA) S + (B ∘ decay_to_end)ᵀ-weighted input
+    total = cs[-1]
+    decay_states = jnp.exp(total - cs)[:, None]    # (Q,1)
+    state_new = state * jnp.exp(total) + jax.lax.dot_general(
+        xd, B * decay_states, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (p, n)
+    state_scr[...] = state_new
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_bhcq(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int, interpret: bool = False
+             ) -> jax.Array:
+    """x: (b,h,s,p); dt: (b,h,s,1); A: (h,); B/C: (b,g,s,n).  s % chunk == 0."""
+    b, h, s, p = x.shape
+    g, n = B.shape[1], B.shape[3]
+    rep = h // g
+    nc = s // chunk
+    grid = (b, h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, ci, r=rep: (bi, hi // r, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, ci, r=rep: (bi, hi // r, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)

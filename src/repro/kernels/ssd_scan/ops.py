@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the SSD kernel: model layout (b,s,h,p)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_bhcq
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+        chunk_size: int, *, interpret: Optional[bool] = None) -> jax.Array:
+    """SSD scan, model layout.  x: (b,s,h,p); dt: (b,s,h); B/C: (b,s,g,n)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, p = x.shape
+    pad = (-s) % chunk_size
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    xt = jnp.transpose(x, (0, 2, 1, 3))                      # (b,h,s,p)
+    dtt = jnp.transpose(dt, (0, 2, 1))[..., None]            # (b,h,s,1)
+    Bt = jnp.transpose(B, (0, 2, 1, 3))                      # (b,g,s,n)
+    Ct = jnp.transpose(C, (0, 2, 1, 3))
+    y = ssd_bhcq(xt, dtt, A, Bt, Ct, chunk=chunk_size, interpret=interpret)
+    y = jnp.transpose(y, (0, 2, 1, 3))
+    return y[:, :s] if pad else y

@@ -1,0 +1,126 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space dual) scan.
+
+Implements the chunked block-decomposition from the Mamba2 paper
+(arXiv:2405.21060, Listing 1 "ssd_minimal_discrete"), generalized to
+grouped B/C (n_groups <= n_heads).  This is the single source of truth:
+the model's default (non-Pallas) path and the Pallas kernel tests both
+call into it.
+
+Shapes
+------
+x  : (b, s, h, p)   per-head input
+dt : (b, s, h)      positive step sizes (softplus already applied)
+A  : (h,)           negative per-head decay rates (A = -exp(A_log))
+B  : (b, s, g, n)   input projection  (g groups, h % g == 0)
+C  : (b, s, g, n)   output projection
+-> y : (b, s, h, p)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """(..., T) -> (..., T, T) with out[i, j] = sum_{k=j+1..i} x[k] (i >= j)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_reference(x: jax.Array, dt: jax.Array, A: jax.Array,
+                  B: jax.Array, C: jax.Array, chunk_size: int,
+                  initial_state: jax.Array | None = None,
+                  return_final_state: bool = False):
+    """Chunked SSD in fp32.  See module docstring for shapes."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    orig_s = s
+    if s % chunk_size:
+        # pad with dt=0 tokens: decay exp(0)=1, zero input — state-neutral
+        pad = chunk_size - s % chunk_size
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    rep = h // g
+    c = s // chunk_size
+    Q = chunk_size
+
+    f32 = jnp.float32
+    xd = (x.astype(f32) * dt[..., None].astype(f32))           # discretized input
+    dA = dt.astype(f32) * A.astype(f32)                        # (b,s,h) log decay
+    Bh = jnp.repeat(B.astype(f32), rep, axis=2)                # (b,s,h,n)
+    Ch = jnp.repeat(C.astype(f32), rep, axis=2)
+
+    # chunk: (b, c, Q, ...)
+    xd = xd.reshape(b, c, Q, h, p)
+    dA = dA.reshape(b, c, Q, h).transpose(0, 3, 1, 2)          # (b,h,c,Q)
+    Bh = Bh.reshape(b, c, Q, h, n)
+    Ch = Ch.reshape(b, c, Q, h, n)
+
+    dA_cs = jnp.cumsum(dA, axis=-1)                            # (b,h,c,Q)
+
+    # 1. intra-chunk (block-diagonal)
+    L = jnp.exp(segsum(dA))                                    # (b,h,c,Q,Q)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Ch, Bh, L, xd)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)            # (b,h,c,Q)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bh, decay_states, xd)
+
+    # 3. inter-chunk recurrence
+    if initial_state is None:
+        init = jnp.zeros((b, h, p, n), f32)
+    else:
+        init = initial_state.astype(f32)
+    chunk_decay = jnp.exp(dA_cs[..., -1])                      # (b,h,c)
+
+    def step(carry, inp):
+        st, dec = inp                                          # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                      # emit state *entering* chunk
+
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (b,c,h,p,n)
+
+    # 4. off-diagonal (cross-chunk) contribution
+    state_decay_out = jnp.exp(dA_cs)                           # (b,h,c,Q)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, prev_states,
+                       state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :orig_s].astype(x.dtype)
+    if return_final_state:
+        return y, final
+    return y
+
+
+def ssd_step(state: jax.Array, x_t: jax.Array, dt_t: jax.Array, A: jax.Array,
+             B_t: jax.Array, C_t: jax.Array):
+    """Single decode step.
+
+    state: (b,h,p,n); x_t: (b,h,p); dt_t: (b,h); B_t/C_t: (b,g,n).
+    Returns (y_t (b,h,p), new_state).
+    """
+    b, h, p, n = state.shape
+    g = B_t.shape[1]
+    rep = h // g
+    f32 = jnp.float32
+    Bh = jnp.repeat(B_t.astype(f32), rep, axis=1)              # (b,h,n)
+    Ch = jnp.repeat(C_t.astype(f32), rep, axis=1)
+    dA = jnp.exp(dt_t.astype(f32) * A.astype(f32))             # (b,h)
+    xd = x_t.astype(f32) * dt_t[..., None].astype(f32)
+    new_state = state.astype(f32) * dA[..., None, None] \
+        + jnp.einsum("bhp,bhn->bhpn", xd, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    return y.astype(x_t.dtype), new_state

@@ -1,0 +1,273 @@
+"""Trip-count-aware HLO analysis for collective-byte accounting.
+
+``compiled.as_text()`` prints each while-loop body ONCE, but the body
+executes trip-count times (layer scans, microbatch accumulation), so a
+naive textual sum undercounts collective bytes by the loop depth.  This
+parser:
+
+1. splits the HLO module into named computations,
+2. sums collective result bytes per computation,
+3. walks the call graph (while/call/fusion/conditional) multiplying
+   while-body contributions by the loop trip count, which jax scans encode
+   in the while *condition* computation as ``constant(N)`` fed to an
+   iter < N compare.
+
+The same walk yields per-op execution counts used in EXPERIMENTS.md
+§Roofline (e.g. "all-gather x126 per step").
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s+\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_REF_RE = re.compile(
+    r"(condition|body|to_apply|calls|true_computation|false_computation)"
+    r"=%([\w\.\-]+)")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+_COLL_RE = re.compile(
+    r" (all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\S.*?)\s+"
+                     r"([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for x in dims.split(","):
+            if x:
+                n *= int(x)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_dims(text: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    """First shape in ``text`` -> (dtype, dims); None if not an array type."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return None
+    return dt, tuple(int(x) for x in dims.split(",") if x)
+
+
+def _numel(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+class Computation:
+    def __init__(self, name: str, is_entry: bool = False):
+        self.name = name
+        self.is_entry = is_entry
+        self.lines: List[str] = []
+        self.collectives: List[Tuple[str, int]] = []   # (op, result bytes)
+        self.whiles: List[Tuple[str, str]] = []        # (condition, body)
+        self.plain_calls: List[str] = []               # executed once per hit
+        self.trip_hint: Dict[str, int] = {}            # body -> trip count
+        self.fused_calls: set = set()                  # computations fused in
+        self.flops: float = 0.0                        # dot flops, this comp
+        self.bytes_accessed: float = 0.0               # operand+result bytes
+        self.symbols: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+
+    # ---------------------------------------------------------- per-line
+    def ingest(self, stripped: str) -> None:
+        dm = _DEF_RE.match(stripped)
+        if not dm:
+            return
+        name, result_type, op = dm.groups()
+        shape = _parse_dims(result_type)
+        if shape:
+            self.symbols[name] = shape
+
+        # operand text = between op( and the matching close paren (approx:
+        # up to '), ' or end)
+        args_start = stripped.find(op + "(") + len(op) + 1
+        args_end = stripped.find(")", args_start)
+        args_text = stripped[args_start:args_end] if args_end > 0 else ""
+        operands = _OPERANDS_RE.findall(args_text)
+
+        if op == "dot" and shape:
+            cd = _CDIMS_RE.search(stripped)
+            contract = 1
+            if cd and operands:
+                lhs = self.symbols.get(operands[0])
+                if lhs:
+                    for ax in (int(x) for x in cd.group(1).split(",") if x):
+                        if ax < len(lhs[1]):
+                            contract *= lhs[1][ax]
+            self.flops += 2.0 * _numel(shape[1]) * contract
+
+        # HBM-traffic proxy: operands + result of materializing ops
+        if op in ("dot", "fusion", "convolution", "copy", "dynamic-slice",
+                  "dynamic-update-slice", "all-reduce", "all-gather",
+                  "reduce-scatter", "all-to-all", "collective-permute",
+                  "all-reduce-start", "all-gather-start",
+                  "collective-permute-start", "custom-call", "reduce",
+                  "transpose", "sort", "scatter", "gather", "concatenate"):
+            b = 0
+            if shape:
+                b += _numel(shape[1]) * _DTYPE_BYTES[shape[0]]
+            for o in operands:
+                s = self.symbols.get(o)
+                if s:
+                    b += _numel(s[1]) * _DTYPE_BYTES[s[0]]
+            self.bytes_accessed += b
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, "Computation"], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for raw in hlo.splitlines():
+        stripped = raw.strip()
+        m = _HDR_RE.match(raw.strip()) if stripped.endswith("{") else None
+        if m and "->" in raw:
+            cur = Computation(m.group(2), bool(m.group(1)))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        cur.lines.append(stripped)
+        cur.ingest(stripped)
+        cm = _COLL_RE.search(stripped)
+        if cm and cm.group(2) != "-done":
+            seg = stripped.split(" = ", 1)
+            result_type = seg[1].split(f" {cm.group(1)}")[0] if len(seg) == 2 \
+                else stripped
+            cur.collectives.append((cm.group(1), _shape_bytes(result_type)))
+        refs = dict()
+        for kind, name in _REF_RE.findall(stripped):
+            refs.setdefault(kind, name)
+        if " while(" in stripped and "condition" in refs and "body" in refs:
+            cur.whiles.append((refs["condition"], refs["body"]))
+            tm = _TRIP_RE.search(stripped)
+            if tm:
+                cur.trip_hint[refs["body"]] = int(tm.group(1))
+        else:
+            is_fusion = " fusion(" in stripped
+            for kind, name in _REF_RE.findall(stripped):
+                cur.plain_calls.append(name)
+                if is_fusion and kind == "calls":
+                    cur.fused_calls.add(name)
+    return comps, entry
+
+
+def _trip_count(cond: Optional["Computation"]) -> int:
+    if cond is None:
+        return 1
+    consts: List[int] = []
+    for line in cond.lines:
+        consts += [int(x) for x in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def collective_totals(hlo: str) -> Dict[str, Any]:
+    comps, entry = parse_computations(hlo)
+    memo: Dict[str, Tuple[Dict[str, int], Dict[str, int]]] = {}
+
+    def walk(name: str, stack=()) -> Tuple[Dict[str, int], Dict[str, int]]:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or name in stack:
+            return {}, {}
+        by_bytes: Dict[str, int] = {}
+        by_count: Dict[str, int] = {}
+        for op, b in c.collectives:
+            by_bytes[op] = by_bytes.get(op, 0) + b
+            by_count[op] = by_count.get(op, 0) + 1
+        for cond_name, body_name in c.whiles:
+            trips = _trip_count(comps.get(cond_name))
+            bb, bc = walk(body_name, stack + (name,))
+            for op, v in bb.items():
+                by_bytes[op] = by_bytes.get(op, 0) + v * trips
+            for op, v in bc.items():
+                by_count[op] = by_count.get(op, 0) + v * trips
+        for cal in c.plain_calls:
+            bb, bc = walk(cal, stack + (name,))
+            for op, v in bb.items():
+                by_bytes[op] = by_bytes.get(op, 0) + v
+            for op, v in bc.items():
+                by_count[op] = by_count.get(op, 0) + v
+        memo[name] = (by_bytes, by_count)
+        return memo[name]
+
+    by_bytes, by_count = walk(entry) if entry else ({}, {})
+    return {"bytes_by_op": by_bytes, "counts": by_count,
+            "total_bytes": sum(by_bytes.values())}
+
+
+def compute_totals(hlo: str) -> Dict[str, float]:
+    """Trip-count-aware FLOP and HBM-byte totals from per-device HLO text.
+
+    FLOPs: every ``dot`` (2 x out-numel x contraction), anywhere in the call
+    graph, multiplied by enclosing while-loop trip counts — this is what
+    ``cost_analysis()`` misses (it counts loop bodies once).
+
+    Bytes: operands+result of materializing top-level ops (fusion, dot,
+    copy, collectives, ...).  Inner ops of a fusion are NOT charged bytes
+    (they live in registers/VMEM), but inner dots ARE charged flops.
+    """
+    comps, entry = parse_computations(hlo)
+    memo: Dict[Tuple[str, bool], Tuple[float, float]] = {}
+
+    def walk(name: str, in_fusion: bool, stack=()) -> Tuple[float, float]:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        c = comps.get(name)
+        if c is None or name in stack:
+            return 0.0, 0.0
+        fl = c.flops
+        by = 0.0 if in_fusion else c.bytes_accessed
+        for cond_name, body_name in c.whiles:
+            trips = c.trip_hint.get(body_name) or \
+                _trip_count(comps.get(cond_name))
+            f2, b2 = walk(body_name, in_fusion, stack + (name,))
+            fl += f2 * trips
+            by += b2 * trips
+        for cal in c.plain_calls:
+            f2, b2 = walk(cal, in_fusion or cal in c.fused_calls,
+                          stack + (name,))
+            fl += f2
+            by += b2
+        memo[key] = (fl, by)
+        return memo[key]
+
+    fl, by = walk(entry, False) if entry else (0.0, 0.0)
+    return {"flops": fl, "bytes_accessed": by}
+
+
+def loop_trip_counts(hlo: str) -> List[Tuple[str, int]]:
+    """(body name, trip count) for every while loop — compile-plan sanity."""
+    comps, _ = parse_computations(hlo)
+    out = []
+    for c in comps.values():
+        for cond_name, body_name in c.whiles:
+            out.append((body_name, _trip_count(comps.get(cond_name))))
+    return out

@@ -1,0 +1,28 @@
+"""Production mesh construction (TPU v5e pods).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first backend init, and smoke
+tests must see 1 CPU device while the dry-run sees 512 placeholders).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256-chip v5e pod, or 2 pods = 512 chips over DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_edge_mesh(num_stages: int, data_parallel: int = 1):
+    """Edge-fleet mesh for DT-FM pipeline runs: (data, stage)."""
+    return jax.make_mesh((data_parallel, num_stages), ("data", "stage"))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (tests / examples): 1-D data mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

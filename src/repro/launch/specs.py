@@ -1,0 +1,91 @@
+"""ShapeDtypeStruct stand-ins for every model input — no device allocation.
+
+``input_specs(cfg, shape)`` returns the exact batch the train/prefill step
+consumes; ``decode_specs`` the (tokens, index) pair for ``serve_step``.
+Frontend stubs ([vlm]/[audio] carve-out): precomputed patch/frame embeddings
+of the right shape stand in for the vision/audio encoders.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import InputShape
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def vlm_split(seq_len: int) -> Tuple[int, int]:
+    """(vision tokens, text tokens) for a VLM sequence budget."""
+    v = min(1024, seq_len // 4)
+    return v, seq_len - v
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Batch spec for a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    emb_dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        # whisper: geometry is fixed by the model (1500 frames, <=448 dec)
+        S_dec = cfg.max_target_positions
+        return {"frames": SDS((B, cfg.encoder_seq_len, d), emb_dt),
+                "tokens": SDS((B, S_dec), jnp.int32),
+                "labels": SDS((B, S_dec), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        Sv, St = vlm_split(S)
+        return {"tokens": SDS((B, St), jnp.int32),
+                "vision_embeds": SDS((B, Sv, d), emb_dt),
+                "labels": SDS((B, S), jnp.int32),
+                "positions": SDS((3, B, S), jnp.int32)}
+    return {"tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """(tokens, index[, enc]) specs for serve_step; cache comes separately."""
+    B = shape.global_batch
+    out: Dict[str, Any] = {"tokens": SDS((B, 1), jnp.int32),
+                           "index": SDS((), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        out["enc"] = SDS((B, cfg.encoder_seq_len, cfg.d_model),
+                         jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.is_encoder_decoder:
+        return cfg.max_target_positions
+    return shape.seq_len
+
+
+def concrete_batch(cfg: ModelConfig, shape: InputShape, rng: jax.Array
+                   ) -> Dict[str, jax.Array]:
+    """Materialize a random batch matching input_specs (small shapes only)."""
+    specs = input_specs(cfg, shape)
+    out: Dict[str, jax.Array] = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32 and k in ("tokens",):
+            out[k] = jax.random.randint(rng, s.shape, 0, cfg.vocab_size,
+                                        jnp.int32)
+        elif k == "labels":
+            out[k] = jax.random.randint(rng, s.shape, 0, cfg.vocab_size,
+                                        jnp.int32)
+        elif k == "positions":
+            S = s.shape[-1]
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                   s.shape[1:])
+            out[k] = jnp.broadcast_to(pos[None], s.shape)
+        else:
+            out[k] = jax.random.normal(rng, s.shape, s.dtype)
+    if cfg.arch_type == "vlm":
+        # labels: mask the vision prefix
+        Sv = out["vision_embeds"].shape[1]
+        lbl = out["labels"]
+        mask = jnp.arange(lbl.shape[1]) < Sv
+        out["labels"] = jnp.where(mask[None, :], -1, lbl)
+    return out

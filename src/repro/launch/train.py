@@ -1,0 +1,81 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the trainer loop for any registered architecture on whatever devices
+exist.  ``--reduced`` (default on CPU) trains the smoke variant;
+``--mesh data,model`` builds a local mesh from the visible devices so the
+same entrypoint drives a laptop, an edge mesh simulation
+(``--host-devices N``), or a real pod slice.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --steps 100
+    PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
+        --host-devices 8 --mesh 2,4 --steps 50
+"""
+
+import argparse
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-125m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "full", "dots", "dots_no_batch"])
+    ap.add_argument("--full", action="store_true",
+                    help="train the FULL config (needs real accelerators)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="fake host device count (CPU simulation)")
+    ap.add_argument("--mesh", default="",
+                    help="comma dims for a (data, model) mesh")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--device", default="laptop-m2pro",
+                    help="energy-model device for the carbon ledger")
+    args = ap.parse_args()
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    from repro.configs import get_config
+    from repro.core.carbon.accounting import CarbonLedger
+    from repro.core.energy.devices import get_device
+    from repro.core.energy.monitor import ComponentModel, EnergyMonitor
+    from repro.train.trainer import TrainerConfig, train
+
+    cfg = get_config(args.arch if args.full else args.arch + "-smoke")
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params on "
+          f"{jax.device_count()} device(s)")
+
+    monitor = EnergyMonitor(ComponentModel.for_device(
+        get_device(args.device)))
+    tc = TrainerConfig(steps=args.steps, batch=args.batch, seq_len=args.seq,
+                       microbatches=args.microbatches, remat=args.remat,
+                       checkpoint_dir=args.checkpoint_dir,
+                       checkpoint_every=args.checkpoint_every)
+
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split(","))
+        mesh = jax.make_mesh(dims, ("data", "model")[: len(dims)])
+        with jax.set_mesh(mesh):
+            res = train(cfg, tc, monitor=monitor)
+    else:
+        res = train(cfg, tc, monitor=monitor)
+
+    led = CarbonLedger()
+    led.add_operational_wh("train", res.energy_wh)
+    print(f"[train] final loss {res.final_loss:.4f}  "
+          f"{res.steps_per_s:.2f} steps/s  "
+          f"{res.energy_wh:.3f} Wh modelled  "
+          f"{led.operational_kg*1000:.3f} gCO2e")
+
+
+if __name__ == "__main__":
+    main()

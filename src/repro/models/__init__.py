@@ -1,0 +1,2 @@
+"""Model zoo: pure-pytree parameterized architectures (dense/MoE/SSM/hybrid/
+encoder-decoder/VLM) with scan-based layer stacks."""

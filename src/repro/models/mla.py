@@ -1,0 +1,111 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Train/prefill uses the expanded form (latent up-projected to per-head K/V,
+standard attention).  Decode uses the *absorbed* form: the cache stores only
+the compressed latent (kv_lora_rank) plus the shared rope key — the W^UK
+projection is absorbed into the query so scores are computed directly in
+latent space.  Cache bytes per token: kv_lora_rank + qk_rope_head_dim,
+vs. 2·H·head_dim for vanilla MHA — the paper's key serving win.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (NEG_INF, apply_rope, attention_core, norm)
+
+
+def _queries(p: Dict[str, Any], h: jax.Array, cfg: ModelConfig):
+    m = cfg.mla
+    if m.q_lora_rank > 0:
+        qa = norm(p["q_norm"], h @ p["wq_a"].astype(h.dtype), cfg)
+        q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"].astype(h.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    return jnp.split(q, [m.qk_nope_head_dim], axis=-1)   # (nope, rope)
+
+
+def _latent(p: Dict[str, Any], h: jax.Array, cfg: ModelConfig):
+    m = cfg.mla
+    kv_a = h @ p["wkv_a"].astype(h.dtype)                 # (B,S,rank+rope)
+    latent, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    latent = norm(p["kv_norm"], latent, cfg)
+    return latent, k_rope
+
+
+def mla_forward(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, *,
+                positions: jax.Array, causal: bool = True,
+                impl: str = "chunked") -> jax.Array:
+    """Full-sequence MLA sublayer (expanded form)."""
+    from repro.distributed.act_sharding import BATCH, constrain
+    from repro.models.layers import run_attention
+    m = cfg.mla
+    h = norm(p["norm"], x, cfg)
+    q_nope, q_rope = _queries(p, h, cfg)
+    latent, k_rope = _latent(p, h, cfg)
+
+    kv = jnp.einsum("bsr,rhk->bshk", latent, p["wkv_b"].astype(h.dtype))
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    H = q_nope.shape[2]
+    k_rope = jnp.broadcast_to(k_rope, k_rope.shape[:2] + (H, m.qk_rope_head_dim))
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    q = constrain(q, BATCH, None, "model", None)
+    k = constrain(k, BATCH, None, "model", None)
+    v = constrain(v, BATCH, None, "model", None)
+    out = run_attention(q, k, v, causal=causal, impl=impl)
+    return x + jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    return {"latent": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype)}
+
+
+def mla_decode(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, *,
+               cache: Dict[str, jax.Array], index: jax.Array,
+               positions: jax.Array
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode with the absorbed latent cache.  x: (B,1,d)."""
+    m = cfg.mla
+    h = norm(p["norm"], x, cfg)
+    q_nope, q_rope = _queries(p, h, cfg)                  # (B,1,H,·)
+    latent_t, k_rope_t = _latent(p, h, cfg)               # (B,1,rank),(B,1,rope)
+
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope_t = apply_rope(k_rope_t[:, :, None, :], positions,
+                          cfg.rope_theta)[:, :, 0, :]
+
+    latent_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent_t.astype(cache["latent"].dtype), index, axis=1)
+    k_rope_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), index, axis=1)
+
+    w_k, w_v = jnp.split(p["wkv_b"].astype(x.dtype), [m.qk_nope_head_dim],
+                         axis=-1)                         # (r,H,nope),(r,H,v)
+    # absorb W^UK into the query: latent-space query (B,H,r)
+    q_abs = jnp.einsum("bshk,rhk->bhr", q_nope, w_k)
+    lat = latent_c.astype(jnp.float32)
+    scores = (jnp.einsum("bhr,btr->bht", q_abs.astype(jnp.float32), lat)
+              + jnp.einsum("bshk,btk->bht",
+                           q_rope.astype(jnp.float32),
+                           k_rope_c.astype(jnp.float32)))
+    scores = scores / jnp.sqrt(jnp.float32(m.qk_head_dim))
+    T = lat.shape[1]
+    valid = jnp.arange(T)[None, None, :] <= index
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bht,btr->bhr", probs, lat)      # (B,H,r)
+    out = jnp.einsum("bhr,rhv->bhv", out_lat.astype(x.dtype), w_v)
+    y = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(x.dtype))
+    return x + y[:, None, :], {"latent": latent_c, "k_rope": k_rope_c}

@@ -1,0 +1,161 @@
+"""Mixture-of-experts FFN with sort-based static-capacity dispatch.
+
+TPU-friendly formulation: no dynamic shapes.  Dispatch is computed *per
+batch row* (vmapped over B): each row sorts its S·k assignments by expert
+id and scatters into a fixed-capacity buffer ``(E, C_row, d)``.  The
+resulting global buffer is (B, E, C, d) — batch dim shards over ``data``
+(FSDP axis), expert dim over ``model`` (expert parallelism), so under GSPMD
+the expert einsum is fully partitioned and dispatch lowers to the
+data↔model all-to-all exchange that real MoE systems schedule explicitly.
+
+Tokens beyond capacity are dropped (GShard/Switch semantics); the capacity
+factor controls the drop rate.  Router runs in fp32; a Switch-style
+load-balance auxiliary loss is returned.
+
+Single-token decode (S == 1) uses a flat whole-batch dispatch instead —
+per-row capacity would waste (B, E, 8, d) on one token per row.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import norm
+
+
+def router_probs(p: Dict[str, Any], h: jax.Array, cfg: ModelConfig):
+    """h: (..., d) -> fp32 probs (..., E) + top-k weights/ids."""
+    m = cfg.moe
+    logits = h.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, m.experts_per_token)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)   # renormalize
+    return probs, top_w, top_i
+
+
+def load_balance_loss(probs: jax.Array, top_i: jax.Array,
+                      num_experts: int) -> jax.Array:
+    """Switch-transformer aux loss: E * <f_e> . <p_e> (over all tokens)."""
+    probs2 = probs.reshape(-1, num_experts)
+    ids = top_i.reshape(-1, top_i.shape[-1])
+    assign = jax.nn.one_hot(ids, num_experts, dtype=jnp.float32)
+    frac_tokens = jnp.mean(jnp.sum(assign, axis=1), axis=0)
+    frac_probs = jnp.mean(probs2, axis=0)
+    return num_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = math.ceil(num_tokens * m.experts_per_token / m.num_experts
+                  * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)   # round up to 8 for TPU lane alignment
+
+
+def _expert_ffn(p: Dict[str, Any], buf: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """buf: (..., E, C, d) -> same shape through per-expert FFN."""
+    wi = p["wi"].astype(buf.dtype)
+    wo = p["wo"].astype(buf.dtype)
+    if cfg.mlp_activation == "silu":
+        wg = p["wg"].astype(buf.dtype)
+        a = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", buf, wi))
+        a = a * jnp.einsum("...ecd,edf->...ecf", buf, wg)
+    else:
+        a = jax.nn.gelu(jnp.einsum("...ecd,edf->...ecf", buf, wi))
+    return jnp.einsum("...ecf,efd->...ecd", a, wo)
+
+
+def _shared_ffn(p: Dict[str, Any], h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    wi = p["shared_wi"].astype(h.dtype)
+    wo = p["shared_wo"].astype(h.dtype)
+    if cfg.mlp_activation == "silu":
+        a = jax.nn.silu(h @ wi) * (h @ p["shared_wg"].astype(h.dtype))
+    else:
+        a = jax.nn.gelu(h @ wi)
+    return a @ wo
+
+
+def _dispatch_combine(h: jax.Array, top_w: jax.Array, top_i: jax.Array,
+                      p: Dict[str, Any], cfg: ModelConfig, C: int
+                      ) -> jax.Array:
+    """Batched dispatch.  h: (B, N, d); top_w/top_i: (B, N, k) -> (B, N, d).
+
+    The capacity buffer is (B, E, C, d): batch shards over ``data``, experts
+    over ``model`` — GSPMD lowers the scatter/gather to the data<->model
+    all-to-all exchange of a real expert-parallel system.
+    """
+    from repro.distributed.act_sharding import BATCH, constrain
+    m = cfg.moe
+    B, N, d = h.shape
+    k = m.experts_per_token
+    E = m.num_experts
+
+    flat_e = top_i.reshape(B, N * k)
+    flat_w = top_w.reshape(B, N * k)
+    sort_idx = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=1)
+    # per-row expert counts via batched scatter-add
+    rows = jnp.arange(B)[:, None]
+    counts = jnp.zeros((B, E), jnp.int32).at[rows, flat_e].add(1)
+    starts = jnp.cumsum(counts, axis=1) - counts
+    pos = jnp.arange(N * k)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1)                       # slot within expert
+    keep = pos < C
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)   # drop -> scratch row
+    token_src = sort_idx // k
+
+    # Expert-parallel layout, chosen at trace time:
+    # * full EP (deepseek: E=256 == model x data = 256): experts shard over
+    #   BOTH axes, batch replicates — expert weights live unsharded on
+    #   their device (no per-microbatch FSDP all-gather of all experts),
+    #   dispatch/combine lower to the data<->expert all-to-all.
+    # * legacy (mixtral 8e / jamba 16e): batch over data, experts over
+    #   model where divisible.
+    from repro.distributed.act_sharding import axis_extent
+    ep = axis_extent("model") * axis_extent("data")
+    ep_full = ep > 1 and E % ep == 0 and m.layout == "ep_full"
+    e_axes = ("model", "data") if ep_full else "model"
+    b_axes = None if ep_full else BATCH
+    if m.layout == "unconstrained":
+        e_axes = b_axes = None
+
+    buf = jnp.zeros((B, E * C + 1, d), h.dtype).at[rows, slot].set(
+        h[rows, token_src])
+    buf = constrain(buf[:, :-1].reshape(B, E, C, d), b_axes, e_axes,
+                    None, None)
+    out = _expert_ffn(p, buf, cfg)
+    out = constrain(out, b_axes, e_axes, None, None).reshape(B, E * C, d)
+    out = jnp.concatenate([out, jnp.zeros((B, 1, d), h.dtype)], axis=1)
+
+    w = jnp.take_along_axis(flat_w, sort_idx, axis=1) * keep
+    gathered = out[rows, slot] * w[..., None].astype(h.dtype)
+    return jnp.zeros((B, N, d), h.dtype).at[rows, token_src].add(gathered)
+
+
+def moe_forward(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d).  Returns (residual output, aux loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    h = norm(p["norm"], x, cfg)
+
+    probs, top_w, top_i = router_probs(p, h, cfg)
+    aux = load_balance_loss(probs, top_i, m.num_experts) * m.router_aux_loss_coef
+
+    if S == 1:
+        # decode: flat whole-batch dispatch (1 token per sequence)
+        C = capacity(B, cfg)
+        y = _dispatch_combine(h.reshape(1, B, d), top_w.reshape(1, B, -1),
+                              top_i.reshape(1, B, -1), p, cfg, C
+                              ).reshape(B, 1, d)
+    else:
+        C = capacity(S, cfg)
+        y = _dispatch_combine(h, top_w, top_i, p, cfg, C)
+
+    if m.num_shared_experts > 0:
+        y = y + _shared_ffn(p, h, cfg)
+    return x + y, aux

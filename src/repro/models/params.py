@@ -1,0 +1,364 @@
+"""Parameter specs, initialization, logical sharding axes and counting.
+
+Every parameter in the zoo is described once by a :class:`ParamSpec`
+(shape + logical axes + initializer).  From the spec tree we derive:
+
+* ``init_params``   — concrete arrays (PRNG-seeded) for real execution,
+* ``abstract_params`` — ``jax.ShapeDtypeStruct`` tree for the dry-run,
+* ``param_axes``    — logical-axis tree consumed by ``repro.distributed``,
+* ``count_params``  — exact N for 6·N·D roofline bookkeeping.
+
+Layer stacks are grouped into *scan groups* (see :func:`layer_groups`): a
+maximal run of layers whose sub-layer signature repeats periodically is
+stacked on a leading ``layers`` axis and executed with ``jax.lax.scan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | ssm_a | dt_bias | pos
+    fan_in_dims: Tuple[int, ...] = (0,)   # dims contracted by the matmul
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+# --------------------------------------------------------------------------- #
+# Sub-layer specs
+# --------------------------------------------------------------------------- #
+
+def _norm_spec(cfg: ModelConfig, dim: int, axis: str = "embed") -> Dict[str, ParamSpec]:
+    out = {"scale": ParamSpec((dim,), (axis,), "ones")}
+    if cfg.norm_type == "layernorm":
+        out["bias"] = ParamSpec((dim,), (axis,), "zeros")
+    return out
+
+
+def attn_specs(cfg: ModelConfig, *, cross: bool = False) -> Dict[str, Any]:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s: Dict[str, Any] = {"norm": _norm_spec(cfg, d)}
+    s["wq"] = ParamSpec((d, H, hd), ("embed", "heads", "head"))
+    s["wk"] = ParamSpec((d, K, hd), ("embed", "kv_heads", "head"))
+    s["wv"] = ParamSpec((d, K, hd), ("embed", "kv_heads", "head"))
+    s["wo"] = ParamSpec((H, hd, d), ("heads", "head", "embed"),
+                        fan_in_dims=(0, 1))
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((H, hd), ("heads", "head"), "zeros")
+        s["bk"] = ParamSpec((K, hd), ("kv_heads", "head"), "zeros")
+        s["bv"] = ParamSpec((K, hd), ("kv_heads", "head"), "zeros")
+    return s
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, H, m = cfg.d_model, cfg.num_heads, cfg.mla
+    s: Dict[str, Any] = {"norm": _norm_spec(cfg, d)}
+    if m.q_lora_rank > 0:
+        s["wq_a"] = ParamSpec((d, m.q_lora_rank), ("embed", "q_rank"))
+        s["q_norm"] = _norm_spec(cfg, m.q_lora_rank, "q_rank")
+        s["wq_b"] = ParamSpec((m.q_lora_rank, H, m.qk_head_dim),
+                              ("q_rank", "heads", "head"))
+    else:
+        s["wq"] = ParamSpec((d, H, m.qk_head_dim), ("embed", "heads", "head"))
+    # latent KV: down-proj to kv_lora_rank (+ shared rope dims)
+    s["wkv_a"] = ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           ("embed", "kv_rank"))
+    s["kv_norm"] = _norm_spec(cfg, m.kv_lora_rank, "kv_rank")
+    s["wkv_b"] = ParamSpec((m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+                           ("kv_rank", "heads", "head"))
+    s["wo"] = ParamSpec((H, m.v_head_dim, d), ("heads", "head", "embed"),
+                        fan_in_dims=(0, 1))
+    return s
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s: Dict[str, Any] = {"norm": _norm_spec(cfg, d)}
+    s["wi"] = ParamSpec((d, f), ("embed", "mlp"))
+    if cfg.mlp_activation == "silu":
+        s["wg"] = ParamSpec((d, f), ("embed", "mlp"))
+    s["wo"] = ParamSpec((f, d), ("mlp", "embed"))
+    return s
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, m = cfg.d_model, cfg.moe
+    f = m.d_ff_expert or cfg.d_ff
+    s: Dict[str, Any] = {"norm": _norm_spec(cfg, d)}
+    s["router"] = ParamSpec((d, m.num_experts), ("embed", "experts"))
+    s["wi"] = ParamSpec((m.num_experts, d, f), ("experts", "embed", "mlp"),
+                        fan_in_dims=(1,))
+    if cfg.mlp_activation == "silu":
+        s["wg"] = ParamSpec((m.num_experts, d, f), ("experts", "embed", "mlp"),
+                            fan_in_dims=(1,))
+    s["wo"] = ParamSpec((m.num_experts, f, d), ("experts", "mlp", "embed"),
+                        fan_in_dims=(1,))
+    if m.num_shared_experts > 0:
+        fs = f * m.num_shared_experts
+        s["shared_wi"] = ParamSpec((d, fs), ("embed", "mlp"))
+        if cfg.mlp_activation == "silu":
+            s["shared_wg"] = ParamSpec((d, fs), ("embed", "mlp"))
+        s["shared_wo"] = ParamSpec((fs, d), ("mlp", "embed"))
+    return s
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, ssm = cfg.d_model, cfg.ssm
+    di = ssm.d_inner(d)
+    nh = ssm.num_heads(d)
+    gs = ssm.n_groups * ssm.d_state
+    k = ssm.conv_kernel
+    s: Dict[str, Any] = {"norm": _norm_spec(cfg, d)}
+    s["wz"] = ParamSpec((d, di), ("embed", "mamba_inner"))
+    s["wx"] = ParamSpec((d, di), ("embed", "mamba_inner"))
+    s["wB"] = ParamSpec((d, gs), ("embed", "state"))
+    s["wC"] = ParamSpec((d, gs), ("embed", "state"))
+    s["wdt"] = ParamSpec((d, nh), ("embed", "mamba_heads"))
+    s["conv_x"] = ParamSpec((k, di), (None, "mamba_inner"))
+    s["conv_B"] = ParamSpec((k, gs), (None, "state"))
+    s["conv_C"] = ParamSpec((k, gs), (None, "state"))
+    s["A_log"] = ParamSpec((nh,), ("mamba_heads",), "ssm_a")
+    s["D"] = ParamSpec((nh,), ("mamba_heads",), "ones")
+    s["dt_bias"] = ParamSpec((nh,), ("mamba_heads",), "dt_bias")
+    s["gate_norm"] = ParamSpec((di,), ("mamba_inner",), "ones")
+    s["out"] = ParamSpec((di, d), ("mamba_inner", "embed"))
+    return s
+
+
+def xattn_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Cross-attention (whisper decoder)."""
+    return attn_specs(cfg, cross=True)
+
+
+SUBLAYER_BUILDERS = {
+    "attn": attn_specs,
+    "mla": mla_specs,
+    "mlp": mlp_specs,
+    "moe": moe_specs,
+    "ssm": ssm_specs,
+    "xattn": xattn_specs,
+}
+
+
+# --------------------------------------------------------------------------- #
+# Layer grouping (scan groups)
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class ScanGroup:
+    """``depth`` scan steps, each applying ``sublayers`` in order."""
+
+    sublayers: Tuple[str, ...]      # e.g. ("attn","mlp") or 8-layer Jamba unit
+    depth: int                      # scan length
+    first_layer: int                # absolute index of first decoder layer
+
+
+def _layer_signature(cfg: ModelConfig, i: int) -> Tuple[str, ...]:
+    kind = cfg.layer_kind(i)
+    if kind == "ssm":
+        mixer = "ssm"
+    elif cfg.attention == "mla":
+        mixer = "mla"
+    else:
+        mixer = "attn"
+    if cfg.layer_is_moe(i):
+        return (mixer, "moe")
+    if cfg.d_ff == 0:
+        return (mixer,)          # pure-SSM blocks (Mamba2) carry no FFN
+    return (mixer, "mlp")
+
+
+def layer_groups(cfg: ModelConfig, *, decoder: bool = True) -> List[ScanGroup]:
+    """Partition the decoder stack into periodic scan groups."""
+    n = cfg.num_layers
+    sigs = [_layer_signature(cfg, i) for i in range(n)]
+    groups: List[ScanGroup] = []
+    start = 0
+    # prefix of layers different from the tail pattern (DeepSeek dense head)
+    if cfg.first_dense_layers > 0:
+        k = cfg.first_dense_layers
+        assert all(s == sigs[0] for s in sigs[:k])
+        groups.append(ScanGroup(sigs[0], k, 0))
+        start = k
+    rest = sigs[start:]
+    if not rest:
+        return groups
+    period = 1
+    for p in range(1, len(rest) + 1):
+        if len(rest) % p == 0 and all(
+                rest[i] == rest[i % p] for i in range(len(rest))):
+            period = p
+            break
+    unit: List[str] = []
+    for sig in rest[:period]:
+        unit.extend(sig)
+    groups.append(ScanGroup(tuple(unit), len(rest) // period, start))
+    return groups
+
+
+def encoder_groups(cfg: ModelConfig) -> List[ScanGroup]:
+    assert cfg.is_encoder_decoder
+    return [ScanGroup(("attn", "mlp"), cfg.encoder_layers, 0)]
+
+
+def decoder_groups(cfg: ModelConfig) -> List[ScanGroup]:
+    if cfg.is_encoder_decoder:
+        return [ScanGroup(("attn", "xattn", "mlp"), cfg.num_layers, 0)]
+    return layer_groups(cfg)
+
+
+# --------------------------------------------------------------------------- #
+# Spec tree for a whole model
+# --------------------------------------------------------------------------- #
+
+def _stack(spec_tree: PyTree, depth: int) -> PyTree:
+    def add_axis(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((depth,) + s.shape, ("layers",) + s.axes, s.init,
+                         tuple(d + 1 for d in s.fan_in_dims))
+    return jax.tree.map(add_axis, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def group_spec(cfg: ModelConfig, group: ScanGroup) -> Dict[str, Any]:
+    tree: Dict[str, Any] = {}
+    for j, kind in enumerate(group.sublayers):
+        tree[f"s{j}_{kind}"] = SUBLAYER_BUILDERS[kind](cfg)
+    return _stack(tree, group.depth) if group.depth > 1 else tree
+
+
+def model_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    spec: Dict[str, Any] = {}
+    # vocab dims use the PADDED size so vocab-parallel sharding divides
+    # the TP extent (see ModelConfig.vocab_pad_multiple); lm_logits masks
+    # the pad region to -inf
+    spec["embed"] = {"tok": ParamSpec((cfg.padded_vocab_size, d),
+                                      ("vocab", "embed"), fan_in_dims=())}
+    if cfg.pos_embedding == "learned":
+        n_pos = cfg.max_target_positions or cfg.max_seq_len
+        spec["embed"]["pos"] = ParamSpec((n_pos, d), (None, "embed"), "pos",
+                                         fan_in_dims=())
+    if cfg.is_encoder_decoder:
+        enc = {}
+        for gi, g in enumerate(encoder_groups(cfg)):
+            enc[f"g{gi}"] = group_spec(cfg, g)
+        enc["final_norm"] = _norm_spec(cfg, d)
+        spec["encoder"] = enc
+    dec: Dict[str, Any] = {}
+    for gi, g in enumerate(decoder_groups(cfg)):
+        dec[f"g{gi}"] = group_spec(cfg, g)
+    spec["decoder"] = dec
+    spec["final_norm"] = _norm_spec(cfg, d)
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamSpec((d, cfg.padded_vocab_size),
+                                    ("embed", "vocab"))
+    if cfg.mtp_depth > 0:
+        mtp: Dict[str, Any] = {}
+        for k in range(cfg.mtp_depth):
+            mtp[f"d{k}"] = {
+                "proj": ParamSpec((2 * d, d), ("mlp", "embed")),
+                "norm_prev": _norm_spec(cfg, d),
+                "norm_emb": _norm_spec(cfg, d),
+                "block": {"s0_" + _layer_signature(cfg, cfg.num_layers - 1)[0]:
+                          SUBLAYER_BUILDERS[
+                              _layer_signature(cfg, cfg.num_layers - 1)[0]](cfg),
+                          "s1_mlp": mlp_specs(cfg)},
+            }
+        spec["mtp"] = mtp
+    return spec
+
+
+# --------------------------------------------------------------------------- #
+# Materialization
+# --------------------------------------------------------------------------- #
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _sinusoidal(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * i / d)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return out.astype(np.float32)
+
+
+def _init_one(spec: ParamSpec, key: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dtype = jnp.dtype(cfg.param_dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":
+        # A in [1, 16) => A_log = log(A)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(jnp.float32)
+    if spec.init == "dt_bias":
+        lo, hi = cfg.ssm.dt_min, cfg.ssm.dt_max
+        u = jax.random.uniform(key, spec.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(hi) - math.log(lo)) + math.log(lo))
+        # inverse softplus
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32)
+    if spec.init == "pos":
+        return jnp.asarray(_sinusoidal(spec.shape[0], spec.shape[1]), dtype)
+    fan_in = max(1, int(np.prod([spec.shape[d] for d in spec.fan_in_dims]))
+                 if spec.fan_in_dims else spec.shape[-1])
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> PyTree:
+    spec = model_spec(cfg)
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_one(s, k, cfg) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    def to_sds(s: ParamSpec):
+        dt = jnp.float32 if s.init in ("ssm_a", "dt_bias") else \
+            jnp.dtype(cfg.param_dtype)
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return jax.tree.map(to_sds, model_spec(cfg), is_leaf=_is_spec)
+
+
+def param_axes(cfg: ModelConfig) -> PyTree:
+    return jax.tree.map(lambda s: s.axes, model_spec(cfg), is_leaf=_is_spec)
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Total (or per-token-active) parameter count.
+
+    ``active_only`` scales routed-expert params by top-k/num_experts — the
+    MoE 6·N_active·D convention.
+    """
+    spec = model_spec(cfg)
+    total = 0
+    m = cfg.moe
+    for path, leaf in jax.tree.flatten_with_path(spec, is_leaf=_is_spec)[0]:
+        sz = leaf.size()
+        if active_only and m.enabled and "experts" in (leaf.axes or ()):
+            sz = int(sz * m.experts_per_token / m.num_experts)
+        total += sz
+    return total

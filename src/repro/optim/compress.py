@@ -1,0 +1,98 @@
+"""Gradient compression with error feedback — the paper's §5 communication-
+minimization lever ("existing compression techniques reduce communication").
+
+Two compressors over gradient pytrees:
+
+* ``int8``: blockwise symmetric int8 (4× over bf16, 2x over fp32 wire bytes)
+  via the ``kernels/quant8`` Pallas kernel,
+* ``topk``: magnitude top-k sparsification (k as a fraction).
+
+Error feedback (Seide et al. / EF-SGD): the compression residual is added
+back to the next step's gradient, preserving convergence — the property
+tests check that compress(g + e) round-trips within the quantization bound
+and that EF keeps the long-run bias near zero.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant8 import ops as q8
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class CompressConfig:
+    method: str = "none"          # none | int8 | topk
+    topk_fraction: float = 0.01
+    block: int = 256
+    error_feedback: bool = True
+
+
+def init_error(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_leaf_int8(g: jax.Array, block: int) -> jax.Array:
+    q, s, shape = q8.quantize(g, block)
+    return q8.dequantize(q, s, shape, block, jnp.float32)
+
+
+def _compress_leaf_topk(g: jax.Array, frac: float) -> jax.Array:
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(g.shape)
+
+
+def compress_grads(grads: PyTree, error: Optional[PyTree],
+                   cfg: CompressConfig) -> Tuple[PyTree, PyTree]:
+    """Returns (decompressed-gradient-as-transmitted, new error feedback)."""
+    if cfg.method == "none":
+        return grads, error
+
+    def one(g, e):
+        gf = g.astype(jnp.float32)
+        if cfg.error_feedback and e is not None:
+            gf = gf + e
+        if cfg.method == "int8":
+            sent = _compress_leaf_int8(gf, cfg.block)
+        elif cfg.method == "topk":
+            sent = _compress_leaf_topk(gf, cfg.topk_fraction)
+        else:
+            raise ValueError(cfg.method)
+        new_e = gf - sent if cfg.error_feedback else None
+        return sent.astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    if error is None or not cfg.error_feedback:
+        # NB: tree.map(lambda _: None, ...) yields an EMPTY pytree (None
+        # is not a leaf) — build the flat list directly
+        flat_e = [None] * len(flat_g)
+    else:
+        flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    sent = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_err = jax.tree.unflatten(tdef, [o[1] if o[1] is not None
+                                        else jnp.zeros(()) for o in outs])
+    return sent, new_err
+
+
+def wire_bytes(grads: PyTree, cfg: CompressConfig) -> int:
+    """Bytes actually transmitted per all-reduce under this compressor."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        if cfg.method == "int8":
+            total += n + 4 * (n // cfg.block + 1)
+        elif cfg.method == "topk":
+            k = max(1, int(n * cfg.topk_fraction))
+            total += k * 8          # value + index
+        else:
+            total += n * g.dtype.itemsize
+    return total

@@ -1,0 +1,63 @@
+"""Serving steps: prefill and single-token decode (what decode shapes lower).
+
+``serve_step`` consumes ONE new token per sequence against a KV/SSM cache of
+``seq_len`` — the assigned ``decode_32k``/``long_500k`` shapes.  For
+``long_500k`` (batch 1) the attention caches are *sequence-sharded* over the
+``data`` axis (see ``distributed.sharding.cache_shardings``); GSPMD then
+lowers the cache update to a masked in-place write and the softmax reduction
+to the flash-decoding partial-max/sum all-reduce pattern.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params: PyTree, cache: PyTree, tokens: jax.Array,
+                   index: jax.Array, enc: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, PyTree]:
+        logits, new_cache = M.decode_step(params, cfg, cache, tokens, index,
+                                          enc=enc)
+        return logits, new_cache
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig) -> Callable:
+    def prefill(params: PyTree, batch: Dict[str, jax.Array]) -> jax.Array:
+        return M.forward_logits(params, cfg, batch)
+    return prefill
+
+
+def greedy_generate(params: PyTree, cfg: ModelConfig, prompt: jax.Array,
+                    max_new: int, *, cache_len: Optional[int] = None,
+                    enc: Optional[jax.Array] = None) -> jax.Array:
+    """Token-by-token greedy decoding (prompt teacher-forced through the
+    cache one token at a time — exercises exactly the serve_step path)."""
+    B, S = prompt.shape
+    T = cache_len or (S + max_new)
+    cache = M.init_cache(cfg, B, T)
+    if enc is not None:
+        # project encoder K/V once; decode steps read the warmed cache
+        cache = M.warm_cross_cache(params, cfg, cache, enc)
+    step = jax.jit(lambda p, c, t, i: M.decode_step(p, cfg, c, t, i))
+    toks = prompt
+    logits = None
+    for i in range(S):
+        logits, cache = step(params, cache, toks[:, i:i + 1], jnp.int32(i))
+    out = [prompt]
+    cur = jnp.argmax(logits, axis=-1)[:, None]
+    for j in range(max_new - 1):
+        out.append(cur)
+        logits, cache = step(params, cache, cur, jnp.int32(S + j))
+        cur = jnp.argmax(logits, axis=-1)[:, None]
+    out.append(cur)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,93 @@
+"""Trainer loop: jit'd train_step + data pipeline + checkpointing + the
+paper's energy monitor wired per step.
+
+Runs on whatever mesh is ambient — a laptop (1 device), the edge mesh, or
+the production pod.  ``examples/quickstart.py`` and the integration tests
+drive a ~100M-param model through a few hundred steps with decreasing loss.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import flops as F
+from repro.core.energy.monitor import ComponentModel, EnergyMonitor
+from repro.data.pipeline import make_batch_fn
+from repro.models import params as PM
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+PyTree = Any
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 256
+    log_every: int = 10
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    remat: str = "none"
+    microbatches: int = 1
+    seed: int = 0
+
+
+@dataclass
+class TrainerResult:
+    losses: List[float] = field(default_factory=list)
+    steps_per_s: float = 0.0
+    energy_wh: float = 0.0
+    final_loss: float = float("nan")
+
+
+def train(cfg: ModelConfig, tc: TrainerConfig,
+          opt_cfg: Optional[adamw.OptConfig] = None,
+          monitor: Optional[EnergyMonitor] = None) -> TrainerResult:
+    opt_cfg = opt_cfg or adamw.OptConfig(
+        learning_rate=3e-4, warmup_steps=max(10, tc.steps // 20),
+        decay_steps=tc.steps)
+    rng = jax.random.PRNGKey(tc.seed)
+    params = PM.init_params(cfg, rng)
+    opt_state = adamw.init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=tc.remat,
+                                      microbatches=tc.microbatches))
+    data = make_batch_fn(cfg, tc.batch, tc.seq_len, tc.seed)
+
+    step_flops = F.train_flops(cfg, tc.batch, tc.seq_len,
+                               remat=tc.remat != "none")
+    result = TrainerResult()
+    t0 = time.time()
+    t_prev = t0
+    for step in range(tc.steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in next(data).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        result.losses.append(loss)
+        if monitor is not None:
+            t_now = time.time()
+            monitor.record_step(flops=step_flops,
+                                duration_s=t_now - t_prev)
+            t_prev = t_now
+        if tc.log_every and step % tc.log_every == 0:
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}")
+        if tc.checkpoint_every and tc.checkpoint_dir \
+                and (step + 1) % tc.checkpoint_every == 0:
+            ckpt.save(tc.checkpoint_dir, step + 1,
+                      {"params": params, "opt": opt_state})
+            ckpt.prune(tc.checkpoint_dir)
+    wall = time.time() - t0
+    result.steps_per_s = tc.steps / wall
+    result.final_loss = result.losses[-1]
+    if monitor is not None:
+        result.energy_wh = monitor.total_wh
+    return result

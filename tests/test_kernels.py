@@ -1,0 +1,142 @@
+"""Per-kernel validation: Pallas (interpret mode) and the XLA chunked twin
+swept over shapes/dtypes against the pure-jnp oracles (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.chunked import chunked_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.quant8.kernel import dequantize_blocks, quantize_blocks
+from repro.kernels.quant8.ops import dequantize, quantize
+from repro.kernels.quant8.ref import dequantize_reference, quantize_reference
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_reference, ssd_step
+
+FA_CASES = [
+    # B, S, H, K, D, causal, window
+    (2, 256, 4, 2, 64, True, 0),
+    (1, 384, 4, 4, 128, True, 0),
+    (2, 256, 8, 2, 64, True, 128),
+    (1, 200, 2, 1, 64, False, 0),
+    (1, 130, 2, 2, 96, True, 0),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_pallas_vs_ref(case, dtype):
+    B, S, H, K, D, causal, window = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    ref = attention_reference(q, k, v, causal=causal, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_chunked_attention_fwd_and_grad(case):
+    B, S, H, K, D, causal, window = case
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+
+    out = chunked_attention(q, k, v, causal=causal, window=window, chunk=64)
+    ref = attention_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+    f = lambda *a: chunked_attention(*a, causal=causal, window=window,  # noqa
+                                     chunk=64).sum()
+    g = lambda *a: attention_reference(*a, causal=causal,               # noqa
+                                       window=window).astype(jnp.float32).sum()
+    gc = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gc, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+SSD_CASES = [
+    # b, s, h, g, p, n, chunk
+    (2, 256, 4, 1, 64, 32, 64),
+    (1, 128, 8, 2, 32, 128, 32),
+    (2, 100, 4, 4, 64, 16, 32),
+    (1, 512, 2, 1, 128, 64, 128),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_pallas_vs_ref(case, dtype):
+    b, s, h, g, p, n, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, g, n), dtype)
+    C = jax.random.normal(ks[4], (b, s, g, n), dtype)
+    out = ssd(x, dt, A, B, C, chunk, interpret=True)
+    ref = ssd_reference(x, dt, A, B, C, chunk)
+    scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) + 1e-6
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32) / scale,
+                               np.asarray(ref, np.float32) / scale,
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_step_matches_full_scan():
+    """Sequential single-step recurrence == chunked full-sequence scan."""
+    b, s, h, g, p, n = 1, 32, 2, 1, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+    full = ssd_reference(x, dt, A, B, C, chunk_size=8)
+    state = jnp.zeros((b, h, p, n))
+    outs = []
+    for t in range(s):
+        y, state = ssd_step(state, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        outs.append(y)
+    seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,block", [(65536, 256), (512 * 512, 512),
+                                     (1 << 16, 128)])
+def test_quant8_kernel_vs_ref(n, block):
+    x = jax.random.normal(jax.random.PRNGKey(4), (n,)) * 3
+    qk, sk = quantize_blocks(x, block=block, interpret=True)
+    qr, sr = quantize_reference(x, block)
+    assert bool(jnp.all(qk == qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    dk = dequantize_blocks(qk, sk, block=block, interpret=True)
+    dr = dequantize_reference(qr, sr, block)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(100, 777), (3, 5, 7), (65536,)])
+def test_quant8_roundtrip_error_bound(shape):
+    x = jax.random.normal(jax.random.PRNGKey(5), shape) * 2
+    q, s, sh = quantize(x)
+    xr = dequantize(q, s, sh)
+    # blockwise bound: |err| <= scale/2 per block
+    flat = np.asarray(x, np.float32).reshape(-1)
+    pad = (-flat.shape[0]) % 256
+    fb = np.pad(flat, (0, pad)).reshape(-1, 256)
+    bound = np.repeat(np.abs(fb).max(1) / 127 * 0.5 + 1e-6,
+                      256)[:flat.shape[0]]
+    err = np.abs(np.asarray(xr, np.float32).reshape(-1) - flat)
+    assert np.all(err <= bound)

@@ -1,0 +1,173 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Targets the paper-contribution layers: carbon accounting, the idealized /
+DT-FM planners, carbon-aware scheduling, fault-tolerance Pareto logic,
+gradient compression, and the analytic FLOP model.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.opt import opt_config
+from repro.core import flops as F
+from repro.core.carbon.accounting import CarbonLedger
+from repro.core.carbon.intensity import INTENSITY_BY_REGION, IntensityTrace
+from repro.core.energy.devices import (CATALOG, CLOUD_H100, LAPTOP_M2PRO,
+                                       SMARTPHONE_SD888)
+from repro.core.planner import dtfm, idealized
+from repro.core.sched.carbon_aware import (FleetDevice, fleet_carbon_rate,
+                                           select_fleet)
+from repro.core.sched.faults import FaultModel, pareto_frontier
+
+DEVICES = st.sampled_from(list(CATALOG.values()))
+SMALL_OPT = st.sampled_from(["opt-125m", "opt-1.3b", "opt-6.7b"])
+
+
+# --------------------------------------------------------------------- carbon
+@given(st.lists(st.tuples(st.floats(0, 1e4), st.floats(0, 1e4)),
+                min_size=1, max_size=20))
+def test_ledger_totals_are_sums(entries):
+    led = CarbonLedger(intensity_kg_per_kwh=0.3)
+    for i, (kwh, emb) in enumerate(entries):
+        led.add_operational_kwh(f"op{i}", kwh)
+        e = led.entries[-1]
+        assert e.operational_kg == pytest.approx(kwh * 0.3)
+    assert led.total_kg == pytest.approx(
+        sum(k * 0.3 for k, _ in entries))
+    assert led.operational_kg >= 0 and led.embodied_kg == 0
+
+
+@given(st.sampled_from(sorted(INTENSITY_BY_REGION)),
+       st.floats(0, 24), st.floats(-12, 12))
+def test_intensity_trace_bounded_by_base(region, hour, tz):
+    tr = IntensityTrace(region=region, year=2023)
+    base = INTENSITY_BY_REGION[region][2023]
+    v = tr.at_hour(hour, tz)
+    assert 0 < v <= base + 1e-12
+    assert tr.daily_mean(tz) <= base
+
+
+# ------------------------------------------------------------------- planners
+@given(SMALL_OPT, DEVICES, st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_idealized_energy_monotone_in_devices(name, dev, n):
+    """More devices never increase per-device compute time; total energy is
+    compute-dominated and stays within 2x of the single-sum lower bound."""
+    cfg = opt_config(name)
+    p1 = idealized.plan(cfg, dev, batch=16, seq_len=512, steps=10,
+                        num_devices=n)
+    p2 = idealized.plan(cfg, dev, batch=16, seq_len=512, steps=10,
+                        num_devices=2 * n)
+    assert p2.compute_s <= p1.compute_s * (1 + 1e-9)
+    # fleet compute energy is invariant to the split (perfect divisibility)
+    assert p2.energy_wh == pytest.approx(p1.energy_wh, rel=1e-6)
+
+
+@given(SMALL_OPT, st.integers(1, 12), st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_dtfm_plan_invariants(name, n_laptops, n_phones):
+    cfg = opt_config(name)
+    fleet = [LAPTOP_M2PRO] * n_laptops + [SMARTPHONE_SD888] * n_phones
+    plan = dtfm.plan(cfg, fleet, batch=16, seq_len=512, microbatches=8)
+    # stage partition covers all layers exactly once, contiguously
+    covered = []
+    for s in plan.stages:
+        covered.extend(list(s.layers))
+    assert covered == list(range(cfg.num_layers))
+    # bubble fraction in [0, 1); makespan at least the compute lower bound
+    assert 0 <= plan.bubble_fraction < 1
+    slowest = max(s.time_per_microbatch_s for s in plan.stages)
+    assert plan.step_time_s >= plan.microbatches * slowest - 1e-9
+    assert plan.total_energy_wh_per_step > 0
+
+
+@given(st.integers(1, 12))
+@settings(max_examples=20, deadline=None)
+def test_dtfm_heterogeneous_balances_by_speed(n):
+    """Faster devices get at least as many layers as slower ones."""
+    cfg = opt_config("opt-1.3b")
+    fleet = [LAPTOP_M2PRO, SMARTPHONE_SD888] * n
+    splits = dtfm.partition_layers(cfg, fleet)
+    lap = sum(len(splits[i]) for i in range(0, 2 * n, 2))
+    pho = sum(len(splits[i]) for i in range(1, 2 * n, 2))
+    assert lap >= pho
+
+
+# ------------------------------------------------------------------ scheduler
+@given(st.integers(2, 30), st.floats(1, 23))
+@settings(max_examples=30, deadline=None)
+def test_select_fleet_is_greedy_optimal_rate(n, hour):
+    fleet = [FleetDevice(spec=LAPTOP_M2PRO,
+                         region=["nordics", "india"][i % 2], device_id=i)
+             for i in range(n)]
+    target = (n // 2) * LAPTOP_M2PRO.effective_flops * 0.5
+    sel = select_fleet(fleet, target_flops=target, hour_utc=hour)
+    assert sum(s.effective_flops for s in sel) >= target
+    # greedy: selection rate <= rate of any same-size alternative subset
+    rate = fleet_carbon_rate(sel)
+    all_priced = select_fleet(fleet, target_flops=float("inf"),
+                              hour_utc=hour)
+    worst = fleet_carbon_rate(all_priced[-len(sel):])
+    assert rate <= worst + 1e-12
+
+
+@given(st.floats(0.01, 2.0), st.integers(2, 64), st.floats(5, 120))
+@settings(max_examples=30, deadline=None)
+def test_pareto_frontier_is_nondominated(lam, n, step):
+    fm = FaultModel(lambda_per_device_hour=lam, num_devices=n,
+                    step_time_s=step, ckpt_write_s=20.0,
+                    ckpt_restore_s=30.0, stage_recompute_s=4 * step)
+    frontier = pareto_frontier(fm)
+    assert frontier
+    for a in frontier:
+        assert a.slowdown >= 1.0 and a.energy_overhead >= 0.0
+        for b in frontier:
+            if a is not b:
+                assert not a.dominates(b)
+
+
+# ---------------------------------------------------------------- flops model
+@given(SMALL_OPT, st.integers(1, 32), st.sampled_from([128, 512, 2048]))
+@settings(max_examples=40, deadline=None)
+def test_flops_model_scaling_laws(name, batch, seq):
+    cfg = opt_config(name)
+    f1 = F.fwd_flops(cfg, batch, seq)
+    f2 = F.fwd_flops(cfg, 2 * batch, seq)
+    assert f2 == pytest.approx(2 * f1, rel=1e-9)          # linear in batch
+    t = F.train_flops(cfg, batch, seq, remat=False)
+    tr = F.train_flops(cfg, batch, seq, remat=True)
+    assert t == pytest.approx(3 * f1, rel=1e-9)           # fwd + 2x bwd
+    assert tr == pytest.approx(4 * f1, rel=1e-9)          # + recompute
+    # decode flops for 1 token << prefill flops for the same cache
+    assert F.decode_flops(cfg, batch, seq) < f1
+
+
+@given(SMALL_OPT, st.integers(1, 8), st.sampled_from([256, 1024]))
+@settings(max_examples=20, deadline=None)
+def test_kv_cache_monotone(name, batch, seq):
+    cfg = opt_config(name)
+    b1 = F.kv_cache_bytes(cfg, batch, seq)
+    assert F.kv_cache_bytes(cfg, batch, 2 * seq) == pytest.approx(2 * b1)
+    assert F.kv_cache_bytes(cfg, 2 * batch, seq) == pytest.approx(2 * b1)
+
+
+# ------------------------------------------------------------- compression
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 256, 1000]),
+       st.sampled_from(["int8", "topk"]))
+@settings(max_examples=30, deadline=None)
+def test_compression_error_feedback_contract(seed, n, method):
+    """Compressed grad + residual must reconstruct the original exactly
+    (error feedback keeps the lossy part, nothing vanishes)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.optim.compress import CompressConfig, compress_grads
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(n,)).astype(np.float32))}
+    cfgc = CompressConfig(method=method, topk_fraction=0.25)
+    sent, new_err = compress_grads(g, None, cfgc)
+    recon = np.asarray(sent["w"], np.float32) + np.asarray(new_err["w"])
+    np.testing.assert_allclose(recon, np.asarray(g["w"]), rtol=1e-5,
+                               atol=1e-6)
