@@ -139,6 +139,7 @@ def run() -> BenchResult:
             "collective_s": a["collective_s"], "dominant": a["dominant"],
             "useful": a["useful_ratio"], "mfu_ub": a["mfu_upper_bound"],
         })
+    OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text(json.dumps(rows, indent=1))
 
     res.claims.append(Claim("all 33 applicable (arch x shape) pairs lowered "

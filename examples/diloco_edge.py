@@ -1,0 +1,77 @@
+"""DiLoCo-style low-communication training over a two-region edge fleet.
+
+    PYTHONPATH=src python examples/diloco_edge.py [--rounds 8] [--inner 8]
+
+Trains a reduced OPT-style model with the local-update trainer
+(:mod:`repro.train.local_sgd`): each replica runs K inner AdamW steps,
+then the fleet synchronizes pseudo-gradients with an int8-compressed
+hierarchical allreduce whose wide-area cost is priced on the
+:mod:`repro.core.net` topology — the full low-communication stack the
+paper's edge setting needs, end to end on one host.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.core.net import NetParams, Topology, sync_cost
+from repro.core.sched.carbon_aware import FleetDevice
+from repro.core.energy.devices import LAPTOP_M2PRO
+from repro.optim import adamw
+from repro.optim.compress import CompressConfig
+from repro.train.local_sgd import LocalSGDConfig, train_local_sgd
+from repro.train.trainer import TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-125m")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--inner", type=int, default=8, help="K inner steps")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(num_layers=4, d_model=256,
+                                        vocab_size=2048)
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    print(f"model: {cfg.name}  params={cfg.param_count()/1e6:.1f}M  "
+          f"replicas={args.replicas}  K={args.inner}")
+
+    fleet = [FleetDevice(spec=LAPTOP_M2PRO,
+                         region=("europe", "north_america")[i % 2],
+                         device_id=i) for i in range(args.replicas)]
+    topo = Topology.from_fleet(fleet, params=NetParams(wan_bw_Bps=4e6))
+
+    steps = args.rounds * args.inner
+    ls = LocalSGDConfig(replicas=args.replicas, inner_steps=args.inner,
+                        outer_lr=0.7, outer_momentum=0.9,
+                        compress=CompressConfig(method="int8"))
+    res = train_local_sgd(
+        cfg, TrainerConfig(steps=steps, batch=args.batch,
+                           seq_len=args.seq, log_every=args.inner),
+        ls, adamw.OptConfig(learning_rate=3e-3, warmup_steps=5,
+                            decay_steps=steps),
+        topology=topo, sync_algorithm="hierarchical")
+
+    # what the same fleet would pay syncing raw fp32 grads every step
+    naive = sync_cost(topo, topo.devices, cfg.param_count(),
+                      algorithm="ring", compress=None, dtype_bytes=4)
+
+    print(f"\nfinal round loss     : {res.final_loss:.4f} "
+          f"(first {res.round_losses[0]:.4f})")
+    print(f"sync wire bytes/round: {res.sync_wire_bytes_per_round/1e6:.2f} MB"
+          f" (int8)")
+    print(f"modelled sync time   : {res.comm_time_s_per_round:.3f} s/round "
+          f"-> {res.comm_time_s_per_step:.3f} s/step amortized")
+    print(f"naive every-step sync: {naive.time_s:.3f} s/step "
+          f"({naive.time_s / max(res.comm_time_s_per_step, 1e-12):.0f}x "
+          f"more wide-area wire time)")
+
+
+if __name__ == "__main__":
+    main()

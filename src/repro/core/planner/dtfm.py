@@ -7,9 +7,19 @@ data-parallel.  This planner:
 * assigns contiguous layer ranges to devices balancing *time per
   microbatch* across heterogeneous members (compute-capability-weighted),
 * computes the GPipe schedule makespan (bubble-aware),
-* prices communication: activations across stage boundaries + gradient
-  sync across data-parallel replicas,
-* returns per-device energy (active/stall/comm) — what Table 2 reports.
+* prices communication through the wide-area :class:`Topology` and its
+  collective cost models (:mod:`repro.core.net`): stage-boundary
+  activations travel point-to-point along the device→region→backbone
+  hierarchy, data-parallel gradient sync runs the chosen collective
+  (ring / tree / hierarchical / gossip) over optionally-compressed
+  wire bytes, amortized over the local-SGD ``sync_interval``,
+* returns per-device energy (active/stall/comm, comm priced per-link)
+  — what Table 2 reports.
+
+When no topology is supplied one is synthesized from the devices' own
+``net_bw_Bps`` in a single region — which degenerates to (a refinement
+of) the seed's flat min-bandwidth model, so homogeneous single-region
+plans stay comparable.
 """
 
 from __future__ import annotations
@@ -20,7 +30,9 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core import flops as F
 from repro.core.energy.devices import DeviceSpec
+from repro.core.net import Topology, sync_cost
 from repro.models.config import ModelConfig
+from repro.optim.compress import CompressConfig
 
 
 @dataclass(frozen=True)
@@ -29,6 +41,12 @@ class StageAssignment:
     layers: range
     flops_per_microbatch: float
     time_per_microbatch_s: float
+    node: str = ""                    # topology node id
+
+
+def _stage_key(s: "StageAssignment") -> str:
+    """Key tying a stage to its energy / comm-busy ledger entries."""
+    return f"{s.device.name}@L{s.layers.start}-{s.layers.stop}"
 
 
 @dataclass
@@ -41,10 +59,21 @@ class DTFMPlan:
     bubble_fraction: float
     comm_s_per_step: float
     energy_wh_per_step: Dict[str, float] = field(default_factory=dict)
+    boundary_s_per_step: float = 0.0
+    dp_sync_s_per_step: float = 0.0
+    wire_bytes_per_step: float = 0.0
+    comm_busy_s: Dict[str, float] = field(default_factory=dict)
 
     @property
     def total_energy_wh_per_step(self) -> float:
         return sum(self.energy_wh_per_step.values())
+
+    @property
+    def comm_energy_wh_per_step(self) -> float:
+        """Network-module energy: per-stage link busy time x comm power."""
+        return sum(s.device.power_comm_w * self.comm_busy_s.get(
+                       _stage_key(s), 0.0)
+                   for s in self.stages) * self.data_parallel / 3600.0
 
 
 def partition_layers(cfg: ModelConfig, devices: Sequence[DeviceSpec]
@@ -67,7 +96,47 @@ def partition_layers(cfg: ModelConfig, devices: Sequence[DeviceSpec]
 
 def plan(cfg: ModelConfig, devices: Sequence[DeviceSpec], *,
          batch: int, seq_len: int, microbatches: int = 8,
-         data_parallel: int = 1, train: bool = True) -> DTFMPlan:
+         data_parallel: int = 1, train: bool = True,
+         topology: Optional[Topology] = None,
+         nodes: Optional[Sequence[str]] = None,
+         collective: str = "ring",
+         compress: Optional[CompressConfig] = None,
+         sync_interval: int = 1,
+         dp_regions: Optional[Sequence[str]] = None) -> DTFMPlan:
+    """Plan one pipeline of ``devices`` with ``data_parallel`` replicas.
+
+    ``topology``/``nodes`` place each device in the wide-area graph
+    (``nodes[i]`` is ``devices[i]``'s node id); omitted, a single-region
+    topology is synthesized.  ``dp_regions`` optionally spreads the
+    data-parallel replicas across regions (length ``data_parallel``)
+    when pricing gradient sync.  ``sync_interval`` is the local-update
+    K: gradient sync happens once every K steps.
+    """
+    if data_parallel < 1:
+        raise ValueError(f"data_parallel={data_parallel} must be >= 1")
+    if data_parallel > batch:
+        raise ValueError(
+            f"data_parallel={data_parallel} exceeds batch={batch}: "
+            "each replica would get a zero-sized microbatch")
+    if topology is None:
+        if nodes is not None:
+            raise ValueError("nodes= only makes sense with an explicit "
+                             "topology=; the synthesized topology would "
+                             "silently ignore it")
+        topology = Topology.from_specs(devices)
+        nodes = [str(i) for i in range(len(devices))]
+    elif nodes is None:
+        # positional fallback would silently price links for the wrong
+        # device whenever caller order differs from topology insertion
+        # order — require the mapping
+        raise ValueError(
+            "an explicit topology needs nodes= mapping each device to "
+            "its topology node id")
+    if len(nodes) < len(devices):
+        raise ValueError(
+            f"nodes places only {len(nodes)} devices but the pipeline "
+            f"has {len(devices)}")
+
     splits = partition_layers(cfg, devices)
     total_flops = F.train_flops(cfg, batch // data_parallel, seq_len,
                                 remat=False) if train \
@@ -76,12 +145,12 @@ def plan(cfg: ModelConfig, devices: Sequence[DeviceSpec], *,
     mb = microbatches
 
     stages = []
-    for dev, rng in zip(devices, splits):
+    for dev, rng, node in zip(devices, splits, nodes):
         if len(rng) == 0:
             continue                      # idle device: no pipeline stage
         fl = per_layer * len(rng) / mb
         stages.append(StageAssignment(dev, rng, fl,
-                                      fl / dev.effective_flops))
+                                      fl / dev.effective_flops, node))
 
     # GPipe makespan: (mb + S - 1) * slowest stage time
     S = len(stages)
@@ -89,31 +158,79 @@ def plan(cfg: ModelConfig, devices: Sequence[DeviceSpec], *,
     makespan = (mb + S - 1) * t_stage
     bubble = (S - 1) / (mb + S - 1)
 
-    # communication: stage-boundary activations (fwd + bwd) + DP grad sync
+    skey = _stage_key
+    comm_busy: Dict[str, float] = {skey(s): 0.0 for s in stages}
+    boundary_wire = 0.0               # per pipeline replica
+    dp_wire = 0.0                     # already totalled over the dp group
+
+    # stage-boundary activations, fwd (+ bwd for training), per microbatch
+    # chunk over the hierarchical path between the two stage devices
     act_bytes = (batch // data_parallel) * seq_len * cfg.d_model * 2
-    boundary_bytes = 2 * (S - 1) * act_bytes if train \
-        else (S - 1) * act_bytes
-    grad_bytes = F.param_bytes(cfg, 2) if (train and data_parallel > 1) \
-        else 0.0
-    bw = min(d.net_bw_Bps for d in devices)
-    comm_s = boundary_bytes / bw + grad_bytes / bw
+    directions = 2 if train else 1
+    boundary_s = 0.0
+    for a, b in zip(stages[:-1], stages[1:]):
+        mb_bytes = act_bytes / mb
+        t_pair = directions * mb * topology.p2p_time_s(mb_bytes,
+                                                       a.node, b.node)
+        boundary_s += t_pair
+        comm_busy[skey(a)] += t_pair
+        comm_busy[skey(b)] += t_pair
+        boundary_wire += directions * act_bytes
+
+    # DP gradient sync: each stage's grad shard all-reduces across the
+    # data_parallel replicas of that stage (concurrent across stages —
+    # disjoint links — so the slowest stage gates), amortized over the
+    # local-update interval
+    dp_sync_s = 0.0
+    if train and data_parallel > 1:
+        n_elems_total = F.param_bytes(cfg, 1)
+        for s in stages:
+            shard = int(n_elems_total * len(s.layers) / cfg.num_layers)
+            clone_topo = Topology.from_specs(
+                [s.device] * data_parallel, regions=dp_regions,
+                params=topology.params)
+            c = sync_cost(clone_topo, clone_topo.devices, shard,
+                          algorithm=collective, compress=compress,
+                          dtype_bytes=2, sync_interval=sync_interval)
+            dp_sync_s = max(dp_sync_s, c.time_s)
+            comm_busy[skey(s)] += c.per_device_busy_s.get("0", 0.0)
+            dp_wire += c.wire_bytes
+    comm_s = boundary_s + dp_sync_s
 
     # energy: active while computing own microbatches, idle during bubble
-    # and comm, WiFi module during transfers
+    # and comm, network module during this stage's own transfers
     energy: Dict[str, float] = {}
     for s in stages:
         active_s = s.time_per_microbatch_s * mb
         stall_s = max(0.0, makespan - active_s)
-        # each stage touches its two boundaries, not the full pipeline volume
         e = (s.device.power_active_w * active_s
              + s.device.power_idle_w * stall_s
-             + s.device.power_comm_w * comm_s * (2.0 / S if S > 1 else 1.0))
-        energy[f"{s.device.name}@L{s.layers.start}-{s.layers.stop}"] = \
-            energy.get(f"{s.device.name}@L{s.layers.start}-{s.layers.stop}",
-                       0.0) + e * data_parallel / 3600.0
+             + s.device.power_comm_w * comm_busy[skey(s)])
+        energy[skey(s)] = energy.get(skey(s), 0.0) \
+            + e * data_parallel / 3600.0
 
     return DTFMPlan(cfg.name, stages, data_parallel, mb,
-                    makespan + comm_s, bubble, comm_s, energy)
+                    makespan + comm_s, bubble, comm_s, energy,
+                    boundary_s_per_step=boundary_s,
+                    dp_sync_s_per_step=dp_sync_s,
+                    wire_bytes_per_step=boundary_wire * data_parallel
+                    + dp_wire,
+                    comm_busy_s=comm_busy)
+
+
+def min_bw_comm_s(cfg: ModelConfig, devices: Sequence[DeviceSpec], *,
+                  batch: int, seq_len: int, data_parallel: int = 1,
+                  train: bool = True) -> float:
+    """The seed's flat min-bandwidth communication model, kept as the
+    baseline the benchmarks compare the topology-aware pricing against."""
+    splits = partition_layers(cfg, devices)
+    S = sum(1 for r in splits if len(r))
+    act_bytes = (batch // data_parallel) * seq_len * cfg.d_model * 2
+    boundary_bytes = (2 if train else 1) * (S - 1) * act_bytes
+    grad_bytes = F.param_bytes(cfg, 2) if (train and data_parallel > 1) \
+        else 0.0
+    bw = min(d.net_bw_Bps for d in devices)
+    return boundary_bytes / bw + grad_bytes / bw
 
 
 def table2_energy(cfg: ModelConfig, device: DeviceSpec, count: int, *,

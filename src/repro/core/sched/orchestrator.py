@@ -23,9 +23,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import flops as F
 from repro.core.carbon.accounting import CarbonLedger
 from repro.core.carbon.intensity import IntensityTrace
+from repro.core.net import Topology
 from repro.core.planner import dtfm
 from repro.core.sched.carbon_aware import FleetDevice, carbon_rate
 from repro.core.sched.thermal import ThermalState
@@ -59,6 +59,9 @@ class SimResult:
     mean_active_devices: float
     throughput_steps_per_hour: float
     trace: List[Dict] = field(default_factory=list)
+    comm_s_total: float = 0.0
+    comm_energy_wh: float = 0.0
+    topology_rebuilds: int = 0
 
 
 class Orchestrator:
@@ -73,6 +76,15 @@ class Orchestrator:
         self.active: List[FleetDevice] = []
         self.ledger = CarbonLedger()
         self.traces: Dict[str, IntensityTrace] = {}
+        self.topology: Optional[Topology] = None
+        self.topology_rebuilds = 0
+
+    def _rebuild_topology(self) -> Topology:
+        """Wide-area graph over the current active set; called on every
+        membership change (the paper's preemptible-execution loop)."""
+        self.topology = Topology.from_fleet(self.active)
+        self.topology_rebuilds += 1
+        return self.topology
 
     # ------------------------------------------------------------ membership
     def _admit(self, hour: float) -> int:
@@ -109,12 +121,13 @@ class Orchestrator:
     # ------------------------------------------------------------------ run
     def run(self) -> SimResult:
         sim, cfg = self.sim, self.cfg
-        step_flops = F.train_flops(cfg, sim.batch, sim.seq_len, remat=False)
         t = 0.0
         steps = 0
         rework = 0
         changes = 0
         energy_wh = 0.0
+        comm_s_total = 0.0
+        comm_energy_wh = 0.0
         active_sum = 0.0
         iterations = 0
         last_ckpt_step = 0
@@ -127,24 +140,30 @@ class Orchestrator:
         changes += self._admit(hour)
         if not self.active:
             self.active = [self.fleet[0]]
+        topo = self._rebuild_topology()
+        plan = None
 
         while steps < sim.total_steps:
             hour = (sim.start_hour_utc + t / 3600.0) % 24.0
             members_before = {d.device_id for d in self.active}
 
-            # throughput with thermal derating
-            eff = 0.0
-            for d in self.active:
-                ts = self.thermals[d.device_id]
-                perf = ts.perf_factor()
-                eff += d.spec.effective_flops * perf
-            plan = dtfm.plan(cfg, [d.spec for d in self.active],
-                             batch=sim.batch, seq_len=sim.seq_len,
-                             microbatches=sim.microbatches)
-            # scale plan step time by thermal derate of slowest member
+            if plan is None:
+                # membership changed (or first step): rebuild the
+                # wide-area topology and replan against it, pricing
+                # stage-boundary traffic per-link
+                plan = dtfm.plan(
+                    cfg, [d.spec for d in self.active],
+                    batch=sim.batch, seq_len=sim.seq_len,
+                    microbatches=sim.microbatches,
+                    topology=topo,
+                    nodes=[str(d.device_id) for d in self.active])
+            # scale COMPUTE time by the thermal derate of the slowest
+            # member; comm time is not derated (the radio, not the SoC,
+            # is the bottleneck)
             derate = min(self.thermals[d.device_id].perf_factor()
                          for d in self.active)
-            step_s = plan.step_time_s / max(derate, 1e-6)
+            compute_s = plan.step_time_s - plan.comm_s_per_step
+            step_s = compute_s / max(derate, 1e-6) + plan.comm_s_per_step
             self._dt = step_s
 
             # advance thermals under load
@@ -154,9 +173,14 @@ class Orchestrator:
                 if d.device_id not in {a.device_id for a in self.active}:
                     self.thermals[d.device_id].step(0.5, step_s)
 
-            # energy + carbon for this step
-            e_wh = plan.total_energy_wh_per_step / max(derate, 1e-6)
+            # energy + carbon for this step (comm energy un-derated,
+            # matching the wall-time split above)
+            e_comm_wh = plan.comm_energy_wh_per_step
+            e_wh = (plan.total_energy_wh_per_step - e_comm_wh) \
+                / max(derate, 1e-6) + e_comm_wh
             energy_wh += e_wh
+            comm_s_total += plan.comm_s_per_step
+            comm_energy_wh += e_comm_wh
             ci = self.traces.setdefault(
                 self.active[0].region,
                 IntensityTrace(self.active[0].region)).at_hour(hour)
@@ -170,15 +194,36 @@ class Orchestrator:
 
             # churn
             changes_now = self._depart() + self._admit(hour)
+            if not self.active:
+                # carbon/charging eviction can empty the fleet (unlike
+                # _depart, _admit has no min-1 floor): keep the seed
+                # device so the next plan/derate have a member
+                self.active = [self.fleet[0]]
+                changes_now += 1
             changes += changes_now
-            if changes_now and {d.device_id
-                                for d in self.active} != members_before:
-                # failure/departure: roll back to last checkpoint
+            members_now = {d.device_id for d in self.active}
+            if members_before - members_now:
+                # a member LEFT (joins don't lose state): restore from
+                # the last checkpoint and recompute the lost steps —
+                # charged as extra wall time and energy, not by
+                # rewinding the step counter (a rewind livelocks under
+                # sustained churn: expected progress hits zero before
+                # the next checkpoint)
                 lost = min(steps - last_ckpt_step,
                            sim.checkpoint_interval) // 2
                 rework += lost
-                steps = max(last_ckpt_step, steps - lost)
-                t += sim.ckpt_restore_s
+                t += sim.ckpt_restore_s + lost * step_s
+                energy_wh += lost * e_wh
+                comm_s_total += lost * plan.comm_s_per_step
+                comm_energy_wh += lost * e_comm_wh
+                self.ledger.add_operational_wh(f"rework{steps}",
+                                               lost * e_wh, intensity=ci)
+            if changes_now and members_now != members_before:
+                # any membership change: rebuild the wide-area topology
+                # and replan against it (after the rework accounting,
+                # which prices the plan that just executed)
+                topo = self._rebuild_topology()
+                plan = None
 
             t += step_s
             steps += 1
@@ -200,6 +245,9 @@ class Orchestrator:
             mean_active_devices=active_sum / max(iterations, 1),
             throughput_steps_per_hour=steps / (t / 3600.0) if t else 0.0,
             trace=trace,
+            comm_s_total=comm_s_total,
+            comm_energy_wh=comm_energy_wh,
+            topology_rebuilds=self.topology_rebuilds,
         )
 
 

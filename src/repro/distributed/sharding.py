@@ -105,7 +105,7 @@ def sharding_report(cfg, mesh: Mesh,
     total = 0
     replicated = 0
     fallbacks: List[str] = []
-    for path, s in jax.tree.flatten_with_path(
+    for path, s in jax.tree_util.tree_flatten_with_path(
             spec_tree, is_leaf=lambda x: isinstance(x, PM.ParamSpec))[0]:
         spec = spec_for_axes(s.axes, s.shape, mesh, rules)
         shard_factor = 1

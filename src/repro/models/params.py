@@ -356,7 +356,8 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
     spec = model_spec(cfg)
     total = 0
     m = cfg.moe
-    for path, leaf in jax.tree.flatten_with_path(spec, is_leaf=_is_spec)[0]:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            spec, is_leaf=_is_spec)[0]:
         sz = leaf.size()
         if active_only and m.enabled and "experts" in (leaf.axes or ()):
             sz = int(sz * m.experts_per_token / m.num_experts)

@@ -78,21 +78,35 @@ def compress_grads(grads: PyTree, error: Optional[PyTree],
         flat_e = jax.tree.leaves(error)
     outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
     sent = jax.tree.unflatten(tdef, [o[0] for o in outs])
-    new_err = jax.tree.unflatten(tdef, [o[1] if o[1] is not None
-                                        else jnp.zeros(()) for o in outs])
+    if not cfg.error_feedback:
+        # no residual state: return None rather than a pytree of
+        # wrong-shaped scalar placeholders (a later error_feedback=True
+        # toggle or tree-map over the state would crash on those)
+        return sent, None
+    # error_feedback=True: one() always produced a residual per leaf
+    new_err = jax.tree.unflatten(tdef, [o[1] for o in outs])
     return sent, new_err
+
+
+def wire_bytes_count(n: int, cfg: Optional[CompressConfig], *,
+                     dtype_bytes: int = 4) -> int:
+    """Bytes transmitted for ``n`` gradient elements under this compressor.
+
+    The analytic counterpart of :func:`wire_bytes` — what the planner and
+    the net-layer collective cost models consume, so compression choice
+    composes with collective choice without materializing a pytree.
+    """
+    if cfg is None or cfg.method == "none":
+        return n * dtype_bytes
+    if cfg.method == "int8":
+        return n + 4 * (n // cfg.block + 1)
+    if cfg.method == "topk":
+        k = max(1, int(n * cfg.topk_fraction))
+        return k * 8                # value + index
+    raise ValueError(cfg.method)
 
 
 def wire_bytes(grads: PyTree, cfg: CompressConfig) -> int:
     """Bytes actually transmitted per all-reduce under this compressor."""
-    total = 0
-    for g in jax.tree.leaves(grads):
-        n = g.size
-        if cfg.method == "int8":
-            total += n + 4 * (n // cfg.block + 1)
-        elif cfg.method == "topk":
-            k = max(1, int(n * cfg.topk_fraction))
-            total += k * 8          # value + index
-        else:
-            total += n * g.dtype.itemsize
-    return total
+    return sum(wire_bytes_count(g.size, cfg, dtype_bytes=g.dtype.itemsize)
+               for g in jax.tree.leaves(grads))
