@@ -14,10 +14,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (comm_scaling, compress_ablation, fig2_scaling,
-                        fig3_idealized, fig4_breakdown, fig5_offload,
-                        roofline, sched_carbon, table1_single_device,
-                        table2_dtfm)
+from benchmarks import (bench_train_step, comm_scaling, compress_ablation,
+                        fig2_scaling, fig3_idealized, fig4_breakdown,
+                        fig5_offload, roofline, sched_carbon,
+                        table1_single_device, table2_dtfm)
 from benchmarks.common import print_result
 
 MODULES = {
@@ -31,6 +31,7 @@ MODULES = {
     "compress": compress_ablation,
     "roofline": roofline,
     "comm": comm_scaling,
+    "train_step": bench_train_step,
 }
 
 

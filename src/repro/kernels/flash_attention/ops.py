@@ -1,4 +1,9 @@
-"""jit'd public wrapper: (B,S,H,D) layout, CPU falls back to interpret mode."""
+"""jit'd public wrapper: (B,S,H,D) layout, CPU falls back to interpret mode.
+
+Differentiable end-to-end: ``flash_attention_bhsd`` carries a custom VJP
+(fused FA-2 Pallas backward), so ``attn_impl="pallas"`` is a valid training
+path, not just an inference path.
+"""
 
 from __future__ import annotations
 
@@ -23,6 +28,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     On non-TPU backends the Pallas kernel body runs in interpret mode —
     bit-exact kernel logic, Python execution (CI / CPU validation path).
+    The layout swaps sit outside the custom VJP, so jax.grad through this
+    wrapper hits the fused Pallas backward kernels.
     """
     if interpret is None:
         interpret = not _on_tpu()

@@ -6,6 +6,11 @@ Jamba period).  Parameters are stacked on a leading ``layers`` axis and the
 unit is executed under ``jax.lax.scan`` — HLO size stays O(unique layers),
 which keeps 126-layer compiles tractable.  Optional rematerialization wraps
 the scan body with ``jax.checkpoint``.
+
+The execution context ``ctx`` threads ``attn_impl`` ("naive" | "chunked" |
+"pallas" — all differentiable, see :func:`repro.models.layers.run_attention`)
+and ``remat`` from the train/eval step down to every attention sublayer, so
+the jitted step — not the layer code — owns the kernel choice.
 """
 
 from __future__ import annotations

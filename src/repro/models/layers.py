@@ -165,16 +165,26 @@ def _project_qkv(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
     return q, k, v
 
 
+ATTN_IMPLS = ("naive", "chunked", "pallas")
+
+
 def run_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool, window: int = 0, impl: str = "chunked",
                   scale: Optional[float] = None) -> jax.Array:
-    """Dispatch: naive oracle / chunked flash (XLA) / Pallas TPU kernel."""
+    """Dispatch: naive oracle / chunked flash (XLA) / Pallas TPU kernel.
+
+    All three are differentiable — "pallas" carries a fused FA-2 backward
+    (interpret mode off-TPU), so every impl is a valid training path.
+    """
     if impl == "naive":
         return attention_core(q, k, v, causal=causal, window=window)
     if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
         return fa_ops.flash_attention(q, k, v, causal=causal, window=window,
                                       scale=scale)
+    if impl != "chunked":
+        raise ValueError(f"unknown attn_impl {impl!r}; expected one of "
+                         f"{ATTN_IMPLS}")
     from repro.kernels.flash_attention.chunked import chunked_attention
     return chunked_attention(q, k, v, causal=causal, window=window,
                              scale=scale)

@@ -145,7 +145,13 @@ def forward_train(params: PyTree, cfg: ModelConfig,
                   batch: Dict[str, jax.Array], *,
                   remat: str = "none", attn_impl: str = "chunked"
                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Returns (scalar loss, metrics)."""
+    """Returns (scalar loss, metrics).
+
+    ``attn_impl`` selects the attention kernel for every attention sublayer:
+    "naive" (fp32 oracle), "chunked" (XLA flash twin, default), or "pallas"
+    (fused TPU kernel with the FA-2 custom-VJP backward; interpret mode on
+    CPU).  All three train — gradients flow through each impl.
+    """
     from repro.distributed.act_sharding import BATCH, constrain
     tokens = batch["tokens"]
     labels = batch["labels"]

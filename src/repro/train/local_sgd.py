@@ -27,6 +27,14 @@ Inner steps run the same jit'd train step as :mod:`repro.train.trainer`
 on whatever mesh is ambient; replicas are simulated host-side as
 independent parameter copies (the real deployment maps each replica to
 one edge pipeline).
+
+Like the plain trainer, the inner loop is zero-sync: params/opt-state are
+donated into the jit (each replica starts a round from a fresh on-device
+copy of the global params so donation can never invalidate the buffer the
+pseudo-gradient needs), per-step losses accumulate on device, and the
+host fetches everything with a single ``jax.device_get`` per sync round.
+An ``EnergyMonitor`` opts back into per-step sync (it needs real
+per-step wall-clock).
 """
 
 from __future__ import annotations
@@ -124,8 +132,9 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     momentum = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                             global_params)
 
-    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=tc.remat,
-                                      microbatches=tc.microbatches))
+    from repro.train.trainer import effective_donate, make_jit_train_step
+    step_fn = make_jit_train_step(cfg, tc, opt_cfg)
+    donating = effective_donate(tc)
     outer_fn = jax.jit(lambda g, d, m: _outer_update(g, d, m, ls))
 
     R = ls.replicas
@@ -143,22 +152,30 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     t0 = time.time()
     t_prev = t0
     for rnd in range(rounds):
-        round_loss = 0.0
+        round_loss_dev = jnp.float32(0.0)    # accumulated on device
+        r0_losses: List[jax.Array] = []      # replica-0 device scalars
         deltas: Optional[PyTree] = None
         for r in range(R):
-            p, s = locals_[r], opt_states[r]
+            # with donation the jit consumes its input buffers; every
+            # replica therefore starts from a fresh on-device copy so the
+            # shared global_params stay valid for the pseudo-gradient
+            p = jax.tree.map(lambda x: x.copy(), locals_[r]) if donating \
+                else locals_[r]
+            s = opt_states[r]
             for k in range(ls.inner_steps):
-                batch = {kk: jnp.asarray(v)
-                         for kk, v in next(streams[r]).items()}
+                batch = jax.device_put(next(streams[r]))
                 p, s, metrics = step_fn(p, s, batch)
                 if r == 0:
-                    res.losses.append(float(metrics["loss"]))
+                    r0_losses.append(metrics["loss"])
                 if monitor is not None:
+                    # energy accounting needs true per-step wall-clock,
+                    # which only exists at a sync point
+                    jax.block_until_ready(metrics["loss"])
                     t_now = time.time()
                     monitor.record_step(flops=step_flops,
                                         duration_s=t_now - t_prev)
                     t_prev = t_now
-            round_loss += float(metrics["loss"])
+            round_loss_dev = round_loss_dev + metrics["loss"]
             locals_[r], opt_states[r] = p, s
 
             delta = jax.tree.map(
@@ -176,6 +193,10 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         # every replica restarts the next round from the new global
         # params; inner optimizer state persists (DiLoCo)
         locals_ = [global_params] * R
+        # ONE host sync per round: replica-0 per-step losses + fleet mean
+        fetched = jax.device_get({"r0": r0_losses, "round": round_loss_dev})
+        res.losses.extend(float(x) for x in fetched["r0"])
+        round_loss = float(fetched["round"])
         res.round_losses.append(round_loss / R)
         if tc.log_every and rnd % max(1, tc.log_every
                                       // ls.inner_steps) == 0:

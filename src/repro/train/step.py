@@ -34,13 +34,20 @@ def _split_microbatches(batch: Dict[str, jax.Array], m: int
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, *,
-                    remat: str = "full",
+                    remat: str = "none",
                     compress: Optional[CompressConfig] = None,
                     attn_impl: str = "chunked",
                     microbatches: int = 1) -> Callable:
     """Gradient-accumulation microbatching: activation memory scales with
     B/microbatches while the optimizer update stays per-global-batch —
-    the standard big-model memory/throughput trade."""
+    the standard big-model memory/throughput trade.
+
+    ``remat`` defaults to "none" here AND in ``TrainerConfig`` (they used to
+    disagree: "full" vs "none", so the trainer silently rematerialized
+    nothing while dry-runs rematerialized everything).  Rematerialization is
+    a memory/compute trade that only pays off at real model scale, so it is
+    opt-in: the big-model launch paths (``launch/dryrun``, ``launch/train``)
+    pass ``remat`` explicitly."""
 
     def loss_fn(p, mb):
         return M.forward_train(p, cfg, mb, remat=remat, attn_impl=attn_impl)
@@ -81,8 +88,15 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, *,
     return train_step
 
 
-def make_eval_step(cfg: ModelConfig) -> Callable:
+def make_eval_step(cfg: ModelConfig, *, remat: str = "none",
+                   attn_impl: str = "chunked") -> Callable:
+    """jit'd eval step.  Takes the SAME ``remat``/``attn_impl`` knobs as
+    ``make_train_step`` so evaluation runs the configuration being trained
+    (it used to hardcode the forward defaults and silently diverge — e.g. a
+    pallas-trained model would eval through the chunked path)."""
+    @jax.jit
     def eval_step(params: PyTree, batch: Dict[str, jax.Array]):
-        loss, metrics = M.forward_train(params, cfg, batch)
+        loss, metrics = M.forward_train(params, cfg, batch, remat=remat,
+                                        attn_impl=attn_impl)
         return dict(metrics, loss=loss)
     return eval_step

@@ -4,6 +4,26 @@ paper's energy monitor wired per step.
 Runs on whatever mesh is ambient — a laptop (1 device), the edge mesh, or
 the production pod.  ``examples/quickstart.py`` and the integration tests
 drive a ~100M-param model through a few hundred steps with decreasing loss.
+
+The hot loop is zero-sync by default (``benchmarks/bench_train_step.py``
+records the step-time deltas):
+
+* **donation** — ``donate_argnums=(params, opt_state)``: XLA updates the
+  parameter and optimizer buffers in place instead of allocating + copying
+  a full model's worth of HBM every step.  Only requested on backends that
+  implement donation (TPU/GPU) — see :func:`donation_supported`;
+* **async metrics** — per-step metrics stay on device; the loop keeps the
+  uncopied device scalars and fetches with a single ``jax.device_get``
+  every ``log_every`` steps (and one bulk fetch at the end), instead of a
+  blocking ``float(...)`` round-trip per step that drains the dispatch
+  pipeline;
+* **prefetch** — the next batch is staged host→device with
+  ``jax.device_put`` right after the step is dispatched, overlapping input
+  transfer with device compute (double buffering).
+
+Passing an ``EnergyMonitor`` opts back into per-step host sync: energy
+accounting needs true per-step wall-clock, which only exists at a sync
+point.
 """
 
 from __future__ import annotations
@@ -35,17 +55,46 @@ class TrainerConfig:
     log_every: int = 10
     checkpoint_every: int = 0
     checkpoint_dir: Optional[str] = None
-    remat: str = "none"
+    remat: str = "none"         # matches the make_train_step default
+    attn_impl: str = "chunked"  # "naive" | "chunked" | "pallas"
     microbatches: int = 1
+    donate: bool = True         # donate (params, opt_state) into the jit
+    async_metrics: bool = True  # no per-step host sync; bulk-fetch metrics
+    prefetch: bool = True       # double-buffer host->device batch transfer
     seed: int = 0
 
 
 @dataclass
 class TrainerResult:
     losses: List[float] = field(default_factory=list)
-    steps_per_s: float = 0.0
+    steps_per_s: float = 0.0            # includes the compile step
+    steady_steps_per_s: float = 0.0     # excludes the compile step
+    compile_time_s: float = 0.0         # first-step (trace+compile+run) time
     energy_wh: float = 0.0
     final_loss: float = float("nan")
+
+
+def donation_supported() -> bool:
+    """Buffer donation lands on TPU/GPU; XLA's CPU backend ignores it and
+    jax still pays per-call donation bookkeeping for nothing (measured ~7%
+    step-time overhead on the bench config), so the trainer only requests
+    donation where it can actually reuse buffers."""
+    return jax.default_backend() != "cpu"
+
+
+def effective_donate(tc: TrainerConfig) -> bool:
+    return tc.donate and donation_supported()
+
+
+def make_jit_train_step(cfg: ModelConfig, tc: TrainerConfig,
+                        opt_cfg: adamw.OptConfig) -> Callable:
+    """The trainer's jit: (params, opt_state) donated per
+    ``effective_donate`` — requested donation ∧ backend support."""
+    return jax.jit(
+        make_train_step(cfg, opt_cfg, remat=tc.remat,
+                        attn_impl=tc.attn_impl,
+                        microbatches=tc.microbatches),
+        donate_argnums=(0, 1) if effective_donate(tc) else ())
 
 
 def train(cfg: ModelConfig, tc: TrainerConfig,
@@ -57,36 +106,69 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
     rng = jax.random.PRNGKey(tc.seed)
     params = PM.init_params(cfg, rng)
     opt_state = adamw.init_opt_state(params, opt_cfg)
-    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=tc.remat,
-                                      microbatches=tc.microbatches))
+    step_fn = make_jit_train_step(cfg, tc, opt_cfg)
     data = make_batch_fn(cfg, tc.batch, tc.seq_len, tc.seed)
 
     step_flops = F.train_flops(cfg, tc.batch, tc.seq_len,
                                remat=tc.remat != "none")
+    # the monitor needs true per-step wall clock -> forces the sync path
+    sync_every_step = (not tc.async_metrics) or monitor is not None
     result = TrainerResult()
+    pending: List[Dict[str, jax.Array]] = []   # device-resident metrics
+
+    batch = jax.device_put(next(data)) if tc.prefetch else None
     t0 = time.time()
     t_prev = t0
     for step in range(tc.steps):
-        batch = {k: jax.numpy.asarray(v) for k, v in next(data).items()}
+        if not tc.prefetch:
+            batch = jax.device_put(next(data))
         params, opt_state, metrics = step_fn(params, opt_state, batch)
-        loss = float(metrics["loss"])
-        result.losses.append(loss)
+        if tc.prefetch and step + 1 < tc.steps:
+            # step is dispatched but not complete: stage the next batch now
+            # so generation + transfer overlap with device compute
+            batch = jax.device_put(next(data))
+
+        host: Optional[Dict[str, Any]] = None
+        if sync_every_step:
+            host = jax.device_get(metrics)          # one sync per step
+            result.losses.append(float(host["loss"]))
+        else:
+            pending.append(metrics)                 # no sync
+        if step == 0:
+            if host is None:
+                jax.block_until_ready(metrics["loss"])
+            result.compile_time_s = time.time() - t0
         if monitor is not None:
             t_now = time.time()
             monitor.record_step(flops=step_flops,
                                 duration_s=t_now - t_prev)
             t_prev = t_now
         if tc.log_every and step % tc.log_every == 0:
-            print(f"step {step:5d}  loss {loss:.4f}  "
-                  f"gnorm {float(metrics['grad_norm']):.3f}  "
-                  f"lr {float(metrics['lr']):.2e}")
+            if host is None:
+                # drain the whole window in ONE device_get: bounds the
+                # device-resident metrics backlog at log_every entries
+                fetched = jax.device_get(pending)
+                result.losses.extend(float(m["loss"]) for m in fetched)
+                host = fetched[-1]
+                pending.clear()
+            print(f"step {step:5d}  loss {float(host['loss']):.4f}  "
+                  f"gnorm {float(host['grad_norm']):.3f}  "
+                  f"lr {float(host['lr']):.2e}")
         if tc.checkpoint_every and tc.checkpoint_dir \
                 and (step + 1) % tc.checkpoint_every == 0:
             ckpt.save(tc.checkpoint_dir, step + 1,
                       {"params": params, "opt": opt_state})
             ckpt.prune(tc.checkpoint_dir)
+    if pending:
+        fetched = jax.device_get(pending)           # one bulk sync at exit
+        result.losses.extend(float(m["loss"]) for m in fetched)
     wall = time.time() - t0
     result.steps_per_s = tc.steps / wall
+    if tc.steps > 1 and wall > result.compile_time_s:
+        result.steady_steps_per_s = (tc.steps - 1) / (wall -
+                                                      result.compile_time_s)
+    else:
+        result.steady_steps_per_s = result.steps_per_s
     result.final_loss = result.losses[-1]
     if monitor is not None:
         result.energy_wh = monitor.total_wh

@@ -43,6 +43,66 @@ def test_flash_attention_pallas_vs_ref(case, dtype):
 
 
 @pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_pallas_grad_vs_chunked(case):
+    """Fused Pallas FA-2 backward (interpret) == chunked custom-VJP grads
+    to <=1e-3 in fp32 across causal / sliding-window / GQA / padded-seq
+    (acceptance criterion for the pallas training path)."""
+    B, S, H, K, D, causal, window = case
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    w = jax.random.normal(ks[3], (B, S, H, D))   # non-trivial cotangent
+
+    fp = lambda *a: (flash_attention(*a, causal=causal, window=window,  # noqa
+                                     interpret=True) * w).sum()
+    fc = lambda *a: (chunked_attention(*a, causal=causal, window=window,  # noqa
+                                       chunk=64) * w).sum()
+    gp = jax.grad(fp, argnums=(0, 1, 2))(q, k, v)
+    gc = jax.grad(fc, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip(("dq", "dk", "dv"), gp, gc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3, err_msg=name)
+
+
+def test_flash_attention_pallas_grad_bf16_runs():
+    """bf16 primals: backward runs and cotangents keep the primal dtype
+    (custom_vjp contract)."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.bfloat16)
+    f = lambda *a: flash_attention(*a, causal=True,                     # noqa
+                                   interpret=True).astype(jnp.float32).sum()
+    gq, gk, gv = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    assert gq.dtype == jnp.bfloat16 and gk.dtype == jnp.bfloat16 \
+        and gv.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(gq, np.float32)).all()
+
+
+def test_train_step_accepts_donated_buffers():
+    """The jitted train step runs with donate_argnums=(params, opt_state):
+    two consecutive steps reuse the chain of donated buffers without error
+    and keep producing finite losses."""
+    from repro.configs.opt import opt_config
+    from repro.optim import adamw
+    from repro.train.step import make_train_step
+
+    cfg = opt_config("opt-125m").reduced(num_layers=1, d_model=64,
+                                         vocab_size=256)
+    from repro.models import params as PM
+    params = PM.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = adamw.OptConfig(warmup_steps=1, decay_steps=4)
+    opt_state = adamw.init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    for _ in range(2):
+        params, opt_state, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+@pytest.mark.parametrize("case", FA_CASES)
 def test_chunked_attention_fwd_and_grad(case):
     B, S, H, K, D, causal, window = case
     ks = jax.random.split(jax.random.PRNGKey(1), 3)

@@ -27,6 +27,40 @@ def test_training_loss_decreases():
     last = np.mean(res.losses[-5:])
     assert last < first - 0.5, (first, last)
     assert np.isfinite(res.final_loss)
+    assert res.compile_time_s > 0.0
+    assert res.steady_steps_per_s > 0.0
+
+
+def test_async_zero_sync_loop_matches_seed_loop():
+    """The zero-sync loop (donation + async metrics + prefetch) is a pure
+    scheduling change: the loss trajectory is identical to the seed-style
+    per-step-sync loop."""
+    cfg = opt_config("opt-125m").reduced(num_layers=2, d_model=128,
+                                         vocab_size=512)
+    kw = dict(steps=8, batch=4, seq_len=32, log_every=0, seed=11)
+    sync = train(cfg, TrainerConfig(donate=False, async_metrics=False,
+                                    prefetch=False, **kw))
+    fast = train(cfg, TrainerConfig(donate=True, async_metrics=True,
+                                    prefetch=True, **kw))
+    np.testing.assert_allclose(sync.losses, fast.losses, rtol=0, atol=0)
+
+
+def test_eval_step_matches_train_configuration():
+    """make_eval_step threads attn_impl/remat: its loss equals the raw
+    forward with the same knobs (it used to hardcode the defaults)."""
+    from repro.train.step import make_eval_step
+
+    cfg = tiny(get_config("qwen2-7b"))
+    params = P.init_params(cfg, jax.random.PRNGKey(5))
+    toks = jax.random.randint(jax.random.PRNGKey(6), (2, 32), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    for impl in ("naive", "chunked"):
+        ev = make_eval_step(cfg, attn_impl=impl, remat="none")
+        got = ev(params, batch)
+        want, _ = M.forward_train(params, cfg, batch, attn_impl=impl)
+        np.testing.assert_allclose(float(got["loss"]), float(want),
+                                   rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("arch", ["qwen2-7b", "mamba2-130m",
