@@ -1,0 +1,150 @@
+"""Placement benchmark: topology-aware vs round-robin on a 2-region fleet.
+
+The claim under test (the plan→place→execute refactor's payoff): on a
+heterogeneous fleet spread over two regions joined by a slow WAN,
+searching placements topology-aware — each pipeline's regions contiguous,
+DP replicas carved region-first, non-uniform layer boundaries balancing
+laptop/smartphone compute — strictly reduces BOTH modeled cross-region
+bytes per step and modeled step time versus the naive round-robin
+carve-up of the same fleet.  Energy and the local-SGD sync pricing ride
+along as reported rows.
+
+    PYTHONPATH=src python -m benchmarks.bench_placement [--smoke] [--out F]
+
+Writes ``BENCH_placement.json`` next to ``BENCH_train_step.json`` — the
+artifact CI uploads.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from benchmarks.common import BenchResult, Claim, print_result
+from repro.configs import get_config
+from repro.core.energy.devices import LAPTOP_M2PRO, SMARTPHONE_SD888
+from repro.core.net import NetParams, Topology
+from repro.core.placement import round_robin_placement, search_placement
+from repro.core.planner import dtfm
+from repro.core.sched.carbon_aware import FleetDevice
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_placement.json"
+
+BATCH, SEQ, MB = 16, 512, 8
+
+
+def two_region_fleet(per_region: int = 4) -> List[FleetDevice]:
+    """Heterogeneous 2-region fleet, caller order interleaving regions —
+    the arrival order a naive (round-robin) assignment would consume."""
+    fleet = []
+    for i in range(2 * per_region):
+        region = ("europe", "north_america")[i % 2]
+        spec = (LAPTOP_M2PRO, SMARTPHONE_SD888)[(i // 2) % 2]
+        fleet.append(FleetDevice(spec=spec, region=region, device_id=i))
+    return fleet
+
+
+def _measure(cfg, fleet, data_parallel: int, sync_interval: int
+             ) -> Dict[str, Dict]:
+    topo = Topology.from_fleet(fleet, params=NetParams(wan_bw_Bps=5e6))
+    devices = [d.spec for d in fleet]
+    nodes = [str(d.device_id) for d in fleet]
+    kw = dict(batch=BATCH, seq_len=SEQ, microbatches=MB,
+              collective="hierarchical", sync_interval=sync_interval)
+
+    rr = round_robin_placement(cfg, devices, topology=topo, nodes=nodes,
+                               data_parallel=data_parallel)
+    ta = search_placement(cfg, devices, topology=topo, nodes=nodes,
+                          data_parallel=data_parallel, **kw)
+    out = {}
+    for tag, spec in (("round_robin", rr), ("topology_aware", ta)):
+        p = dtfm.plan_placement(cfg, spec, **kw)
+        out[tag] = {
+            "strategy": spec.strategy,
+            "boundaries": spec.boundaries,
+            "cross_region_edges": spec.cross_region_edges(),
+            "step_time_s": p.step_time_s,
+            "wan_bytes_per_step": p.wan_bytes_per_step,
+            "wire_bytes_per_step": p.wire_bytes_per_step,
+            "energy_wh_per_step": p.total_energy_wh_per_step,
+            "comm_s_per_step": p.comm_s_per_step,
+            "bubble_fraction": p.bubble_fraction,
+        }
+    return out
+
+
+def run(smoke: bool = False, out: Path = OUT) -> BenchResult:
+    res = BenchResult(name="bench_placement")
+    cfg = get_config("opt-125m")
+
+    scenarios = [("dp2xS4, K=1", 2, 1), ("dp2xS4, K=16", 2, 16)]
+    if not smoke:
+        scenarios += [("dp4xS2, K=1", 4, 1), ("dp1xS8, K=1", 1, 1)]
+
+    record: Dict[str, Dict] = {"config": {
+        "model": cfg.name, "batch": BATCH, "seq_len": SEQ,
+        "microbatches": MB, "fleet": "2 regions x (2 laptops + 2 phones)",
+        "wan_bw_Bps": 5e6}}
+    head = None
+    for tag, dp, k in scenarios:
+        m = _measure(cfg, two_region_fleet(), dp, k)
+        record[tag] = m
+        if head is None:
+            head = m
+        for strat in ("round_robin", "topology_aware"):
+            r = m[strat]
+            res.rows.append({
+                "scenario": tag, "placement": strat,
+                "step_s": r["step_time_s"],
+                "wan_MB_per_step": r["wan_bytes_per_step"] / 1e6,
+                "xregion_edges": r["cross_region_edges"],
+                "energy_wh": r["energy_wh_per_step"],
+                "boundaries": "|".join(map(str, r["boundaries"])),
+            })
+
+    rr, ta = head["round_robin"], head["topology_aware"]
+    res.claims.append(Claim(
+        "topology-aware placement strictly reduces modeled cross-region "
+        "bytes/step vs round-robin (2-region heterogeneous fleet)",
+        ta["wan_bytes_per_step"] / rr["wan_bytes_per_step"],
+        0.0, 0.999))
+    res.claims.append(Claim(
+        "topology-aware placement strictly reduces modeled step time "
+        "vs round-robin (2-region heterogeneous fleet)",
+        ta["step_time_s"] / rr["step_time_s"], 0.0, 0.9999))
+    k16 = record["dp2xS4, K=16"]["topology_aware"]
+    res.claims.append(Claim(
+        "once local update (K=16) amortizes grad sync, the search "
+        "recovers region-contiguous pipelines (0 cross-region stage "
+        "boundaries)", k16["cross_region_edges"], 0, 0))
+    res.notes.append(
+        f"winning K=1 layout: {ta['strategy']}, boundaries "
+        f"{ta['boundaries']} (non-uniform: laptops carry more layers "
+        f"than phones); K=1 keeps DP sync intra-region and pays "
+        f"activation WAN, K=16 flips to region-contiguous pipelines — "
+        f"the cost model, not a heuristic, picks the crossing to pay")
+
+    out.write_text(json.dumps({"record": record,
+                               "claims": [c.__dict__ for c in res.claims]},
+                              indent=1))
+    res.notes.append(f"wrote {out.name}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer scenarios (CI)")
+    ap.add_argument("--out", default=str(OUT),
+                    help="where to write the JSON artifact")
+    args = ap.parse_args()
+    r = run(smoke=args.smoke, out=Path(args.out))
+    print_result(r)
+    if not r.ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

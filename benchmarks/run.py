@@ -14,9 +14,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_train_step, comm_scaling, compress_ablation,
-                        fig2_scaling, fig3_idealized, fig4_breakdown,
-                        fig5_offload, roofline, sched_carbon,
+from benchmarks import (bench_placement, bench_train_step, comm_scaling,
+                        compress_ablation, fig2_scaling, fig3_idealized,
+                        fig4_breakdown, fig5_offload, roofline, sched_carbon,
                         table1_single_device, table2_dtfm)
 from benchmarks.common import print_result
 
@@ -32,6 +32,7 @@ MODULES = {
     "roofline": roofline,
     "comm": comm_scaling,
     "train_step": bench_train_step,
+    "placement": bench_placement,
 }
 
 

@@ -32,12 +32,14 @@ import jax           # noqa: E402
 import jax.numpy as jnp   # noqa: E402
 import numpy as np   # noqa: E402
 
+from repro import compat                            # noqa: E402
 from repro.configs.opt import opt_config            # noqa: E402
 from repro.core.energy.devices import LAPTOP_M2PRO  # noqa: E402
 from repro.core.planner import dtfm                 # noqa: E402
 from repro.data.pipeline import make_batch_fn       # noqa: E402
 from repro.distributed.pipeline import (            # noqa: E402
-    pipeline_train_step, unstack_stages)
+    make_pipeline_loss, pipeline_train_step, stack_for_stages,
+    unstack_stages)
 from repro.optim import adamw                       # noqa: E402
 
 
@@ -74,7 +76,7 @@ def main() -> None:
     init_fn, step_fn = pipeline_train_step(
         cfg, mesh, opt_cfg, num_microbatches=args.microbatches)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         rest, staged, opt = init_fn(jax.random.PRNGKey(0))
         data = make_batch_fn(cfg, args.batch, args.seq, seed=0)
         losses = []
@@ -102,6 +104,27 @@ def main() -> None:
           f"bubble {plan.bubble_fraction:.2f}  "
           f"comm {plan.comm_s_per_step:.2f}s/step  "
           f"energy {plan.total_energy_wh_per_step*1000:.2f} mWh/step")
+
+    # the same contract, heterogeneous: a smartphone joins, the placement
+    # search hands it fewer layers, and the SAME executor runs that
+    # non-uniform split (boundaries flow spec -> pipeline)
+    from repro.core.energy.devices import SMARTPHONE_SD888   # noqa: E402
+    from repro.core.placement import ordered_placement       # noqa: E402
+    hetero = [LAPTOP_M2PRO] * (STAGES - 1) + [SMARTPHONE_SD888]
+    spec = ordered_placement(cfg, hetero)
+    print(f"\nheterogeneous placement (1 phone joins):\n{spec.describe()}")
+    if len(spec.boundaries) - 1 == STAGES:
+        loss_fn = make_pipeline_loss(cfg, mesh,
+                                     num_microbatches=args.microbatches,
+                                     boundaries=spec)
+        from repro.models import params as PM                    # noqa: E402
+        p = PM.init_params(cfg, jax.random.PRNGKey(1))
+        st = stack_for_stages(cfg, p, spec)
+        with compat.set_mesh(mesh):
+            b = {k: jnp.asarray(v) for k, v in next(data).items()}
+            nl = jax.jit(loss_fn)(p, st, b)
+        print(f"  non-uniform split {spec.layer_counts} executes: "
+              f"loss {float(nl):.4f}")
 
 
 if __name__ == "__main__":

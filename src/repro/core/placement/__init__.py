@@ -1,0 +1,24 @@
+"""Topology-aware placement: the contract between planning and execution.
+
+A :class:`PlacementSpec` says, for every data-parallel replica, which
+device holds which pipeline stage, where that device sits in the
+wide-area :class:`~repro.core.net.Topology`, and which **non-uniform**
+contiguous layer range each stage owns.  The DT-FM planner *searches*
+over placements and prices them (:mod:`repro.core.planner.dtfm`), the
+shard_map pipeline executes exactly the spec's stage boundaries
+(:mod:`repro.distributed.pipeline`), the orchestrator replans through
+the same search on churn, and local-SGD maps replicas onto the spec's
+region groups — one plan, priced and run.
+"""
+
+from repro.core.placement.spec import PlacementSpec, StagePlacement
+from repro.core.placement.search import (balanced_boundaries,
+                                         ordered_placement,
+                                         round_robin_placement,
+                                         search_placement)
+
+__all__ = [
+    "PlacementSpec", "StagePlacement",
+    "balanced_boundaries", "ordered_placement", "round_robin_placement",
+    "search_placement",
+]

@@ -26,6 +26,7 @@ import numpy as np
 from repro.core.carbon.accounting import CarbonLedger
 from repro.core.carbon.intensity import IntensityTrace
 from repro.core.net import Topology
+from repro.core.placement import search_placement
 from repro.core.planner import dtfm
 from repro.core.sched.carbon_aware import FleetDevice, carbon_rate
 from repro.core.sched.thermal import ThermalState
@@ -62,6 +63,8 @@ class SimResult:
     comm_s_total: float = 0.0
     comm_energy_wh: float = 0.0
     topology_rebuilds: int = 0
+    wan_bytes_total: float = 0.0
+    last_placement: str = ""
 
 
 class Orchestrator:
@@ -128,6 +131,8 @@ class Orchestrator:
         energy_wh = 0.0
         comm_s_total = 0.0
         comm_energy_wh = 0.0
+        wan_bytes_total = 0.0
+        last_strategy = ""
         active_sum = 0.0
         iterations = 0
         last_ckpt_step = 0
@@ -149,14 +154,23 @@ class Orchestrator:
 
             if plan is None:
                 # membership changed (or first step): rebuild the
-                # wide-area topology and replan against it, pricing
-                # stage-boundary traffic per-link
-                plan = dtfm.plan(
+                # wide-area topology and replan through the shared
+                # placement API — the search keeps each pipeline's
+                # regions contiguous so stage-boundary activations ride
+                # intra-region links instead of the ad-hoc active-list
+                # order the seed used (collective= explicit so search
+                # and accounting price the same model)
+                placement = search_placement(
                     cfg, [d.spec for d in self.active],
-                    batch=sim.batch, seq_len=sim.seq_len,
-                    microbatches=sim.microbatches,
                     topology=topo,
-                    nodes=[str(d.device_id) for d in self.active])
+                    nodes=[str(d.device_id) for d in self.active],
+                    batch=sim.batch, seq_len=sim.seq_len,
+                    microbatches=sim.microbatches, collective="ring")
+                plan = dtfm.plan_placement(
+                    cfg, placement,
+                    batch=sim.batch, seq_len=sim.seq_len,
+                    microbatches=sim.microbatches, collective="ring")
+                last_strategy = placement.strategy
             # scale COMPUTE time by the thermal derate of the slowest
             # member; comm time is not derated (the radio, not the SoC,
             # is the bottleneck)
@@ -181,6 +195,7 @@ class Orchestrator:
             energy_wh += e_wh
             comm_s_total += plan.comm_s_per_step
             comm_energy_wh += e_comm_wh
+            wan_bytes_total += plan.wan_bytes_per_step
             ci = self.traces.setdefault(
                 self.active[0].region,
                 IntensityTrace(self.active[0].region)).at_hour(hour)
@@ -216,6 +231,7 @@ class Orchestrator:
                 energy_wh += lost * e_wh
                 comm_s_total += lost * plan.comm_s_per_step
                 comm_energy_wh += lost * e_comm_wh
+                wan_bytes_total += lost * plan.wan_bytes_per_step
                 self.ledger.add_operational_wh(f"rework{steps}",
                                                lost * e_wh, intensity=ci)
             if changes_now and members_now != members_before:
@@ -248,6 +264,8 @@ class Orchestrator:
             comm_s_total=comm_s_total,
             comm_energy_wh=comm_energy_wh,
             topology_rebuilds=self.topology_rebuilds,
+            wan_bytes_total=wan_bytes_total,
+            last_placement=last_strategy,
         )
 
 

@@ -5,6 +5,9 @@ using whatever mesh axes exist in the ambient (jit-time) mesh; axes that
 don't exist or don't divide the dim are silently dropped, so model code can
 annotate once and run unchanged on a laptop (1 device), the edge mesh, or
 the 512-chip production mesh.
+
+Mesh introspection goes through :mod:`repro.compat`, so the same code is
+live on jax ≥ 0.5 (abstract mesh) and jax 0.4.x (physical-mesh context).
 """
 
 from __future__ import annotations
@@ -13,6 +16,8 @@ from typing import Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 Part = Union[None, str, Tuple[str, ...]]
 
@@ -28,13 +33,13 @@ def axis_extent(name: str) -> int:
     not Auto) — lets model code pick sharding-dependent layouts at trace
     time without carrying the mesh around."""
     try:
-        am = jax.sharding.get_abstract_mesh()
+        am = compat.get_abstract_mesh()
     except Exception:
         return 1
     if am is None or not am.axis_names:
         return 1
     for n, s, t in zip(am.axis_names, am.axis_sizes, am.axis_types):
-        if n == name and t == jax.sharding.AxisType.Auto:
+        if n == name and t == compat.AxisType.Auto:
             return s
     return 1
 
@@ -44,7 +49,7 @@ def constrain(x: jax.Array, *parts: Part) -> jax.Array:
     so GSPMD remains free to shard them (crucial: a hard None would force
     replication and insert all-gathers against XLA's chosen layout)."""
     try:
-        am = jax.sharding.get_abstract_mesh()
+        am = compat.get_abstract_mesh()
     except Exception:
         return x
     if am is None or not am.axis_names:
@@ -52,7 +57,7 @@ def constrain(x: jax.Array, *parts: Part) -> jax.Array:
     # only Auto axes can carry constraints; inside shard_map (Manual) no-op
     # (compare enum values, NOT str(): str(AxisType.Auto)=="AxisType.Auto")
     auto = {n for n, t in zip(am.axis_names, am.axis_types)
-            if t == jax.sharding.AxisType.Auto}
+            if t == compat.AxisType.Auto}
     if not auto:
         return x
     sizes = {n: s for n, s in zip(am.axis_names, am.axis_sizes) if n in auto}

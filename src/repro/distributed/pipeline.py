@@ -7,6 +7,11 @@ mesh with a ``stage`` axis:
 * the decoder layer stack (uniform ``(attn, mlp)`` groups — the OPT family
   the paper trains) is split into S contiguous stages, parameters sharded
   over ``stage`` on the stacked layer axis,
+* stage boundaries may be **non-uniform** (a
+  :class:`~repro.core.placement.PlacementSpec` balancing heterogeneous
+  devices): every stage is padded to the longest stage's layer count and
+  the phantom scan steps are masked out, so a 3-stage split of an
+  8-layer model runs as (3, 3, 2) real layers on a (3, 3, 3) scan,
 * inside ``shard_map`` each tick runs the local stage and rotates
   activations with ``jax.lax.ppermute`` (the GPipe systolic schedule:
   mb + S - 1 ticks, bubble (S-1)/(mb+S-1)),
@@ -21,8 +26,7 @@ data+pipeline layout, executable on any device count (CPU tests use
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -36,55 +40,141 @@ from repro.models.layers import norm
 
 PyTree = Any
 
+# stage boundaries: an int S (uniform split), an explicit [0,...,L] boundary
+# list, or anything with a ``.boundaries`` attribute (a PlacementSpec)
+Boundaries = Union[int, Sequence[int]]
+
+
+def resolve_boundaries(cfg: ModelConfig, stages: Boundaries) -> List[int]:
+    """Normalize to an explicit boundary list [0, ..., num_layers]."""
+    if hasattr(stages, "boundaries"):            # PlacementSpec duck-type
+        stages = stages.boundaries
+    L = cfg.num_layers
+    if isinstance(stages, int):
+        if L % stages != 0:
+            raise ValueError(
+                f"{L} layers do not split uniformly into {stages} stages; "
+                "pass explicit boundaries (e.g. a PlacementSpec's)")
+        step = L // stages
+        return list(range(0, L + 1, step))
+    bounds = list(stages)
+    if bounds[0] != 0 or bounds[-1] != L or bounds != sorted(bounds) \
+            or len(set(bounds)) != len(bounds):
+        raise ValueError(
+            f"boundaries {bounds} must strictly ascend from 0 to {L}")
+    return bounds
+
+
+def _stage_counts(bounds: List[int]) -> List[int]:
+    return [b - a for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+def stage_layer_mask(cfg: ModelConfig, stages: Boundaries) -> jax.Array:
+    """(S, Lmax) bool: True where a padded scan slot holds a real layer."""
+    counts = _stage_counts(resolve_boundaries(cfg, stages))
+    lmax = max(counts)
+    return jnp.arange(lmax)[None, :] < jnp.asarray(counts)[:, None]
+
 
 def _stage_forward(cfg: ModelConfig, stage_params: PyTree, x: jax.Array,
-                   positions: jax.Array) -> jax.Array:
-    """Run this device's layer slice.  stage_params leaves: (L/S, ...)."""
+                   positions: jax.Array,
+                   mask: Optional[jax.Array] = None) -> jax.Array:
+    """Run this device's layer slice.  stage_params leaves: (Lmax, ...);
+    ``mask`` (Lmax,) skips the zero-padded slots of short stages."""
     ctx = {"positions": positions, "causal": True, "attn_impl": "chunked"}
 
-    def body(h, p_unit):
+    def run(h, p_unit):
         for j, kind in enumerate(("attn", "mlp")):
             h, _ = _sublayer_train(kind, p_unit[f"s{j}_{kind}"], h,
                                    jnp.zeros((), jnp.float32), cfg, ctx)
-        return h, None
+        return h
 
-    h, _ = jax.lax.scan(body, x, stage_params)
+    if mask is None:
+        def body(h, p_unit):
+            return run(h, p_unit), None
+        h, _ = jax.lax.scan(body, x, stage_params)
+    else:
+        def body(h, xs):
+            p_unit, m = xs
+            return jnp.where(m, run(h, p_unit), h), None
+        h, _ = jax.lax.scan(body, x, (stage_params, mask))
     return h
 
 
-def stack_for_stages(cfg: ModelConfig, params: PyTree, num_stages: int
+def stack_for_stages(cfg: ModelConfig, params: PyTree, stages: Boundaries
                      ) -> PyTree:
-    """Reshape decoder stack leaves (L, ...) -> (S, L/S, ...)."""
+    """Reshape decoder stack leaves (L, ...) -> (S, Lmax, ...).
+
+    Uniform splits are a pure reshape; non-uniform boundaries slice each
+    stage's layers and zero-pad to the longest stage (the executor masks
+    the padding, and zero params receive zero grads, so padded slots stay
+    exactly zero through training).
+    """
     groups = PM.decoder_groups(cfg)
     assert len(groups) == 1 and groups[0].sublayers == ("attn", "mlp"), \
         "pipeline path supports uniform dense decoders (OPT family)"
-    L = cfg.num_layers
-    assert L % num_stages == 0, (L, num_stages)
-
-    def reshape(leaf):
-        return leaf.reshape((num_stages, L // num_stages) + leaf.shape[1:])
-    return jax.tree.map(reshape, params["decoder"]["g0"])
-
-
-def unstack_stages(cfg: ModelConfig, staged: PyTree) -> PyTree:
+    bounds = resolve_boundaries(cfg, stages)
+    counts = _stage_counts(bounds)
+    S, lmax = len(counts), max(counts)
     L = cfg.num_layers
 
-    def reshape(leaf):
-        return leaf.reshape((L,) + leaf.shape[2:])
-    return jax.tree.map(reshape, staged)
+    if L == S * lmax:                 # uniform: pure reshape
+        def reshape(leaf):
+            return leaf.reshape((S, lmax) + leaf.shape[1:])
+        return jax.tree.map(reshape, params["decoder"]["g0"])
+
+    def slice_pad(leaf):
+        parts = []
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            pad = [(0, lmax - (b - a))] + [(0, 0)] * (leaf.ndim - 1)
+            parts.append(jnp.pad(leaf[a:b], pad))
+        return jnp.stack(parts)
+    return jax.tree.map(slice_pad, params["decoder"]["g0"])
+
+
+def unstack_stages(cfg: ModelConfig, staged: PyTree,
+                   stages: Optional[Boundaries] = None) -> PyTree:
+    """Invert :func:`stack_for_stages` (drops non-uniform padding)."""
+    L = cfg.num_layers
+
+    if stages is None:                # legacy uniform round-trip
+        def reshape(leaf):
+            return leaf.reshape((L,) + leaf.shape[2:])
+        return jax.tree.map(reshape, staged)
+
+    counts = _stage_counts(resolve_boundaries(cfg, stages))
+
+    def gather(leaf):
+        return jnp.concatenate(
+            [leaf[i, :c] for i, c in enumerate(counts)], axis=0)
+    return jax.tree.map(gather, staged)
 
 
 def make_pipeline_loss(cfg: ModelConfig, mesh: Mesh, *,
-                       num_microbatches: int) -> Callable:
-    """loss(params, staged_layers, batch) with the stage axis pipelined."""
+                       num_microbatches: int,
+                       boundaries: Optional[Boundaries] = None) -> Callable:
+    """loss(params, staged_layers, batch) with the stage axis pipelined.
+
+    ``boundaries`` (a boundary list or PlacementSpec) enables non-uniform
+    stage splits; ``None`` keeps the uniform L/S split.
+    """
     S = mesh.shape["stage"]
     MB = num_microbatches
     perm = [(i, (i + 1) % S) for i in range(S)]
+    bounds = resolve_boundaries(cfg, boundaries if boundaries is not None
+                                else S)
+    if len(bounds) - 1 != S:
+        raise ValueError(
+            f"boundaries {bounds} define {len(bounds) - 1} stages but the "
+            f"mesh 'stage' axis has {S}")
+    uniform = cfg.num_layers == S * max(_stage_counts(bounds))
+    mask_all = None if uniform else stage_layer_mask(cfg, bounds)
 
-    def pipelined(staged, mb_embeds, positions):
-        """Inside shard_map: staged (1, L/S, ...) local; mb_embeds
+    def pipelined(staged, mb_embeds, positions, mask):
+        """Inside shard_map: staged (1, Lmax, ...) local; mb_embeds
         (MB, mbsz, T, d) replicated; returns (MB, mbsz, T, d) outputs."""
         local = jax.tree.map(lambda l: l[0], staged)
+        local_mask = None if mask is None else mask[0]
         stage_id = jax.lax.axis_index("stage")
         mbsz, T, d = mb_embeds.shape[1:]
 
@@ -93,7 +183,7 @@ def make_pipeline_loss(cfg: ModelConfig, mesh: Mesh, *,
             # stage 0 injects microbatch t (while t < MB)
             inject = mb_embeds[jnp.minimum(t, MB - 1)]
             x = jnp.where(stage_id == 0, inject, state)
-            y = _stage_forward(cfg, local, x, positions)
+            y = _stage_forward(cfg, local, x, positions, local_mask)
             # last stage emits finished microbatch t-(S-1)
             done_idx = t - (S - 1)
             is_done = jnp.logical_and(stage_id == S - 1, done_idx >= 0)
@@ -111,9 +201,15 @@ def make_pipeline_loss(cfg: ModelConfig, mesh: Mesh, *,
         return outs[None]           # stacked over stage; stage S-1 is real
 
     from jax.experimental.shard_map import shard_map
-    sm = shard_map(pipelined, mesh=mesh,
-                   in_specs=(P("stage"), P(), P()),
-                   out_specs=P("stage"), check_rep=False)
+    if mask_all is None:
+        sm3 = shard_map(lambda s, e, p: pipelined(s, e, p, None), mesh=mesh,
+                        in_specs=(P("stage"), P(), P()),
+                        out_specs=P("stage"), check_rep=False)
+        sm = lambda s, e, p, _m: sm3(s, e, p)          # noqa: E731
+    else:
+        sm = shard_map(pipelined, mesh=mesh,
+                       in_specs=(P("stage"), P(), P(), P("stage")),
+                       out_specs=P("stage"), check_rep=False)
 
     def loss_fn(params, staged, batch):
         tokens, labels = batch["tokens"], batch["labels"]
@@ -125,7 +221,7 @@ def make_pipeline_loss(cfg: ModelConfig, mesh: Mesh, *,
         positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
                                      (B // MB, T))
         mb_embeds = x.reshape(MB, B // MB, T, -1)
-        outs = sm(staged, mb_embeds, positions)        # (S, MB, mbsz, T, d)
+        outs = sm(staged, mb_embeds, positions, mask_all)  # (S, MB, mbsz, T, d)
         h = outs[S - 1].reshape(B, T, -1)              # last stage's output
         h = norm(params["final_norm"], h, cfg)
         logits = lm_logits(params, cfg, h)
@@ -136,15 +232,19 @@ def make_pipeline_loss(cfg: ModelConfig, mesh: Mesh, *,
 
 
 def pipeline_train_step(cfg: ModelConfig, mesh: Mesh, opt_cfg, *,
-                        num_microbatches: int = 4) -> Tuple[Callable, Callable]:
+                        num_microbatches: int = 4,
+                        boundaries: Optional[Boundaries] = None
+                        ) -> Tuple[Callable, Callable]:
     """Returns (init_fn, step_fn) for pipelined training on ``mesh``."""
     from repro.optim import adamw
-    loss_fn = make_pipeline_loss(cfg, mesh, num_microbatches=num_microbatches)
+    loss_fn = make_pipeline_loss(cfg, mesh, num_microbatches=num_microbatches,
+                                 boundaries=boundaries)
     S = mesh.shape["stage"]
+    stages: Boundaries = boundaries if boundaries is not None else S
 
     def init_fn(rng):
         params = PM.init_params(cfg, rng)
-        staged = stack_for_stages(cfg, params, S)
+        staged = stack_for_stages(cfg, params, stages)
         staged = jax.device_put(
             staged, jax.tree.map(
                 lambda _: NamedSharding(

@@ -44,6 +44,7 @@ def main() -> None:
             + os.environ.get("XLA_FLAGS", ""))
 
     import jax
+    from repro import compat
     from repro.configs import get_config
     from repro.core.carbon.accounting import CarbonLedger
     from repro.core.energy.devices import get_device
@@ -64,7 +65,7 @@ def main() -> None:
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
         mesh = jax.make_mesh(dims, ("data", "model")[: len(dims)])
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             res = train(cfg, tc, monitor=monitor)
     else:
         res = train(cfg, tc, monitor=monitor)

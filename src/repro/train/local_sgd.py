@@ -80,6 +80,9 @@ class LocalSGDResult:
     comm_time_s_per_round: float = 0.0       # modelled, if topology given
     comm_time_s_per_step: float = 0.0        # amortized over K inner steps
     energy_wh: float = 0.0
+    replica_regions: List[str] = field(default_factory=list)  # per replica,
+                                             # when a placement maps them
+    sync_wan_bytes_per_round: float = 0.0    # modelled WAN share
 
 
 def _outer_update(global_params: PyTree, mean_delta: PyTree,
@@ -104,7 +107,8 @@ def _outer_update(global_params: PyTree, mean_delta: PyTree,
 
 def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                     opt_cfg: Optional[adamw.OptConfig] = None, *,
-                    topology=None, sync_algorithm: str = "hierarchical",
+                    topology=None, placement=None,
+                    sync_algorithm: str = "hierarchical",
                     monitor: Optional[EnergyMonitor] = None
                     ) -> LocalSGDResult:
     """Run ``max(1, tc.steps // K)`` whole sync rounds of K inner steps
@@ -115,11 +119,26 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     ``ls.replicas`` devices) makes the result carry the *modelled*
     wide-area sync time per round under ``sync_algorithm``; training
     itself runs on the ambient JAX devices either way.
+
+    ``placement`` (a :class:`repro.core.placement.PlacementSpec` with
+    ``ls.replicas`` pipelines) maps each replica onto its placement
+    region group instead: the pseudo-gradient sync is priced per stage
+    slot over that slot's replica nodes — layer-proportional shards,
+    concurrent across slots — so a region-grouped placement pays
+    intra-region rates first and crosses the WAN O(regions) times.
     """
     if ls.replicas < 1 or ls.inner_steps < 1:
         raise ValueError(
             f"replicas={ls.replicas} and inner_steps={ls.inner_steps} "
             "must both be >= 1")
+    if placement is not None:
+        if topology is not None:
+            raise ValueError("pass either topology= or placement=, not "
+                             "both (the placement carries its topology)")
+        if placement.data_parallel != ls.replicas:
+            raise ValueError(
+                f"placement has {placement.data_parallel} replica "
+                f"pipelines but LocalSGDConfig.replicas={ls.replicas}")
     if topology is not None and len(topology.devices) < ls.replicas:
         raise ValueError(
             f"topology has {len(topology.devices)} devices but "
@@ -210,13 +229,40 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         global_params, ls.compress or CompressConfig(method="none"))
     if monitor is not None:
         res.energy_wh = monitor.total_wh
-    if topology is not None:
+    if topology is not None or placement is not None:
         from repro.core.net import sync_cost
         n_elems = sum(x.size for x in jax.tree.leaves(global_params))
-        group = topology.devices[:R]
-        c = sync_cost(topology, group, n_elems,
-                      algorithm=sync_algorithm, compress=ls.compress,
-                      dtype_bytes=4)
-        res.comm_time_s_per_round = c.time_s
-        res.comm_time_s_per_step = c.time_s / ls.inner_steps
+        if placement is not None:
+            # each stage slot syncs its layer shard over that slot's
+            # replica group (disjoint links — concurrent across slots,
+            # the slowest slot gates); the region-grouped placement is
+            # what makes the hierarchical collective pay intra-region
+            # rates for most of the volume
+            topo = placement.topology
+            L = placement.num_layers
+            t_round = 0.0
+            wan = 0.0
+            for i, group in enumerate(placement.dp_groups()):
+                shard = int(n_elems * placement.layer_counts[i] / L)
+                c = sync_cost(topo, group, shard,
+                              algorithm=sync_algorithm,
+                              compress=ls.compress, dtype_bytes=4)
+                t_round = max(t_round, c.time_s)
+                wan += c.wan_bytes
+            res.comm_time_s_per_round = t_round
+            res.sync_wan_bytes_per_round = wan
+            regions = [""] * R
+            for reg, reps in placement.region_groups().items():
+                for r in reps:
+                    regions[r] = reg
+            res.replica_regions = regions
+        else:
+            group = topology.devices[:R]
+            c = sync_cost(topology, group, n_elems,
+                          algorithm=sync_algorithm, compress=ls.compress,
+                          dtype_bytes=4)
+            res.comm_time_s_per_round = c.time_s
+            res.sync_wan_bytes_per_round = c.wan_bytes
+        res.comm_time_s_per_step = res.comm_time_s_per_round \
+            / ls.inner_steps
     return res

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.distributed.act_sharding import (BATCH, MODEL, axis_extent,
                                             constrain)
 
@@ -27,7 +28,7 @@ def _mesh():
 
 
 def _lowered_constraints(fn, *args):
-    with jax.set_mesh(_mesh()):
+    with compat.set_mesh(_mesh()):
         txt = jax.jit(fn).lower(*args).as_text()
     return [ln for ln in txt.splitlines()
             if "sharding_constraint" in ln or "mhlo.sharding" in ln]
@@ -38,7 +39,11 @@ def test_constraint_reaches_ir():
     lines = _lowered_constraints(
         lambda x: constrain(x, BATCH, MODEL, None).sum(), x)
     assert lines, "constrain() lowered to nothing (AxisType regression)"
-    assert any("data" in ln and "model" in ln for ln in lines)
+    if compat.SHARDY_IR:
+        assert any("data" in ln and "model" in ln for ln in lines)
+    else:
+        # GSPMD IR (jax 0.4.x): device-list form of the same (2, 4, 1) split
+        assert any("devices=[2,4,1]" in ln for ln in lines), lines
 
 
 def test_priority_picks_first_dividing_dim():
@@ -48,13 +53,19 @@ def test_priority_picks_first_dividing_dim():
     lines = _lowered_constraints(
         lambda x: constrain(x, BATCH, MODEL, MODEL, MODEL).sum(), x)
     assert lines
-    (ln,) = [l for l in lines if "sharding_constraint" in l]
-    # dim1 unconstrained, dim2 model
-    assert '{"data"}, {?}, {"model"}, {?}' in ln, ln
+    if compat.SHARDY_IR:
+        (ln,) = [l for l in lines if "sharding_constraint" in l]
+        # dim1 unconstrained, dim2 model
+        assert '{"data"}, {?}, {"model"}, {?}' in ln, ln
+    else:
+        # GSPMD: dims 1/3 unspecified, dim0 data(2), dim2 model(4)
+        (ln,) = [l for l in lines if "mhlo.sharding" in l]
+        assert "devices=[2,1,4,1]" in ln, ln
+        assert "unspecified_dims=[1,3]" in ln, ln
 
 
 def test_axis_extent():
-    with jax.set_mesh(_mesh()):
+    with compat.set_mesh(_mesh()):
         def f(x):
             assert axis_extent("model") == 4
             assert axis_extent("data") == 2
@@ -72,7 +83,7 @@ def test_sharded_matches_unsharded_numerics():
     k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, D), jnp.float32)
     v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, D), jnp.float32)
     ref = chunked_attention(q, k, v, causal=True, chunk=64)
-    with jax.set_mesh(_mesh()):
+    with compat.set_mesh(_mesh()):
         out = jax.jit(lambda q, k, v: chunked_attention(
             q, k, v, causal=True, chunk=64))(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
@@ -91,7 +102,7 @@ def test_gqa_kv_expand_matches_grouped():
     k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, D), jnp.float32)
     v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, D), jnp.float32)
     ref = chunked_attention(q, k, v, causal=True, chunk=32)   # no mesh
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = jax.jit(lambda q, k, v: chunked_attention(
             q, k, v, causal=True, chunk=32))(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import compat
 from repro.launch.hlo_analysis import (collective_totals, compute_totals,
                                        loop_trip_counts)
 
@@ -60,7 +61,7 @@ def test_collectives_counted_per_device_with_trips():
         return h.sum()
 
     x = jax.ShapeDtypeStruct((64, 32), jnp.float32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         hlo = jax.jit(
             f, in_shardings=NamedSharding(mesh, P("data"))
         ).lower(x).compile().as_text()
@@ -97,7 +98,7 @@ def test_train_step_lowers_on_local_mesh_and_parses():
              "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
     b_shard = SH.batch_shardings(mesh, batch)
     step = make_train_step(cfg, opt_cfg, remat="full", microbatches=2)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         compiled = jax.jit(step, in_shardings=(p_shard, opt_shard, b_shard),
                            out_shardings=(p_shard, opt_shard, None)
                            ).lower(p_abs, opt_abs, batch).compile()

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.opt import opt_config
 from repro.data.pipeline import make_batch_fn
 from repro.distributed.pipeline import (make_pipeline_loss,
@@ -46,7 +47,7 @@ def test_pipeline_loss_matches_plain_forward():
 
     loss_fn = make_pipeline_loss(cfg, mesh, num_microbatches=2)
     staged = stack_for_stages(cfg, params, 2)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         pipe_loss = jax.jit(loss_fn)(params, staged, batch)
     np.testing.assert_allclose(float(pipe_loss), float(ref_loss),
                                rtol=5e-3)
@@ -59,7 +60,7 @@ def test_pipeline_trains():
                               decay_steps=40)
     init_fn, step_fn = pipeline_train_step(cfg, mesh, opt_cfg,
                                            num_microbatches=2)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         rest, staged, opt = init_fn(jax.random.PRNGKey(0))
         data = make_batch_fn(cfg, 4, 32, seed=0)
         losses = []
