@@ -1,13 +1,16 @@
-"""Batched serving example: prefill + decode with a KV cache.
+"""Batched serving example: continuous batching over a paged KV cache.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch mixtral-8x7b]
 
 Loads a reduced variant of any assigned architecture (``--arch`` accepts
-all ten ids), prefILLS a batch of prompts, then decodes greedily — the
-exact ``serve_step`` the decode dry-run shapes lower, including MoE
-routing, SSM state caches (mamba2/jamba) and sliding-window caches
-(mixtral).  Prints per-phase timing and the decode energy estimate from
-the component model.
+all ten ids) and serves a mixed-length request set.  Architectures whose
+decoder caches are token-paged (attn/mlp/moe decoders: llama3, qwen*,
+granite, mixtral, opt) run through the continuous-batching engine —
+admission on free KV blocks, prefill/decode interleaving, per-step
+eviction, greedy + temperature/top-k sampling.  SSM / MLA /
+encoder-decoder architectures (mamba2, jamba, deepseek-v3, whisper) fall
+back to the dense ``greedy_generate`` path.  Both report per-token
+energy/carbon from the component model.
 """
 
 from __future__ import annotations
@@ -24,30 +27,78 @@ from repro.core.energy.devices import LAPTOP_M2PRO
 from repro.core.energy.monitor import ComponentModel, EnergyMonitor
 from repro.models import model as M
 from repro.models import params as P
-from repro.serve.step import greedy_generate
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch + "-smoke")      # reduced variant
     print(f"arch: {args.arch} (reduced: {cfg.num_layers}L "
           f"d={cfg.d_model}, {cfg.param_count()/1e6:.1f}M params)")
-
     params = P.init_params(cfg, jax.random.PRNGKey(0))
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
 
+    if M.paged_decode_supported(cfg):
+        run_engine(args, cfg, params)
+    else:
+        print(f"({args.arch} caches are not token-paged; dense greedy path)")
+        run_dense(args, cfg, params)
+
+
+def run_engine(args, cfg, params) -> None:
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve.paged_cache import blocks_for
+    from repro.serve.sampling import SamplingParams
+
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k)
+    reqs = []
+    for i in range(args.requests):
+        L = 3 + (5 * i) % max(args.prompt_len - 2, 1)
+        toks = jax.random.randint(jax.random.PRNGKey(10 + i), (L,), 0,
+                                  cfg.vocab_size)
+        reqs.append(Request(uid=f"req{i}", prompt=list(map(int, toks)),
+                            max_new=args.max_new, sampling=sp))
+
+    block = 8
+    per_seq = blocks_for(args.prompt_len + args.max_new, block) + 1
+    slots = min(args.requests, 4)
+    ecfg = EngineConfig(max_slots=slots, block_size=block,
+                        num_blocks=per_seq * slots + 2,
+                        max_blocks_per_seq=per_seq)
+    engine = ServeEngine(params, cfg, ecfg, device=LAPTOP_M2PRO)
+    out = engine.run(reqs)
+    s = engine.stats()
+
+    print(f"served {len(out)} requests / "
+          f"{int(s['tokens_generated'])} tokens in {engine.wall_s:.2f}s "
+          f"({s['tokens_per_s']:.1f} tok/s, {int(s['steps'])} engine steps, "
+          f"{slots} slots)")
+    print(f"paged KV: peak {s['peak_cache_bytes']/1e3:.1f} kB of "
+          f"{s['pool_bytes']/1e3:.1f} kB pool; peak fragmentation "
+          f"{s['frag_tokens_peak']:.0f} tokens, peak utilization "
+          f"{100*s['utilization_peak']:.0f}%")
+    print(f"energy ({LAPTOP_M2PRO.name}): {s['energy_j']:.2f} J "
+          f"({s['j_per_token']:.3f} J/token, {s['carbon_g']:.4f} gCO2e)")
+    first = out[reqs[0].uid]
+    print(f"sample ({first.uid}): {first.tokens[:8]}")
+
+
+def run_dense(args, cfg, params) -> None:
+    from repro.serve.step import greedy_generate
+
+    batch = args.requests
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (batch, args.prompt_len), 0, cfg.vocab_size)
     enc = None
     if cfg.is_encoder_decoder:
         frames = jax.random.normal(jax.random.PRNGKey(2),
-                                   (args.batch, cfg.encoder_seq_len,
+                                   (batch, cfg.encoder_seq_len,
                                     cfg.d_model), jnp.float32)
         enc = M.encoder_forward(params, cfg, frames, {})
 
@@ -60,13 +111,12 @@ def main() -> None:
     monitor = EnergyMonitor(ComponentModel.for_device(LAPTOP_M2PRO))
     for i in range(args.max_new):
         monitor.record_step(
-            flops=F.decode_flops(cfg, args.batch, args.prompt_len + i),
-            hbm_bytes=F.decode_hbm_bytes(cfg, args.batch,
-                                         args.prompt_len + i),
+            flops=F.decode_flops(cfg, batch, args.prompt_len + i),
+            hbm_bytes=F.decode_hbm_bytes(cfg, batch, args.prompt_len + i),
             duration_s=wall / total)
 
-    print(f"generated {args.batch}x{args.max_new} tokens in {wall:.2f}s "
-          f"({args.batch*args.max_new/wall:.1f} tok/s)")
+    print(f"generated {batch}x{args.max_new} tokens in {wall:.2f}s "
+          f"({batch*args.max_new/wall:.1f} tok/s)")
     print(f"sample token ids: {list(map(int, out[0, -8:]))}")
     bd = monitor.breakdown_j()
     print(f"decode energy model ({LAPTOP_M2PRO.name}): "

@@ -1,0 +1,245 @@
+"""Pallas TPU flash-decode kernel over a paged KV cache.
+
+Single-token decode attention for serving: each query row attends to its
+sequence's cached K/V, which live in fixed-size **pages** (see
+``serve.paged_cache``) rather than one dense per-sequence buffer.
+
+* **Block-table gather** — K/V pages are selected inside the BlockSpec
+  index map from a scalar-prefetched ``(B, max_blocks)`` block table
+  (``PrefetchScalarGridSpec``), so the kernel streams exactly the pages a
+  sequence owns straight from the pool; no dense (B, T, K, D) gather is
+  materialized in HBM.
+* **Split-KV partial max/sum reduction** — the flash-decoding recipe: the
+  page axis is split into ``num_splits`` ranges; each range reduces its
+  pages online (fp32 running max/sum in VMEM scratch, exactly the FA-2
+  forward update from ``kernel.py``) and emits partial ``(m, l, acc)``;
+  a tiny jnp epilogue merges the partials with the standard logsumexp
+  rescale.  On TPU the split axis gives the sequential grid short
+  accumulation chains; in interpret mode it exercises the same math.
+* **GQA + sliding-window block-skip** — the grid runs over KV heads; each
+  program handles that head's ``group = H // K`` query rows.  Pages fully
+  outside the valid range (beyond ``seq_len`` or entirely left of the
+  sliding window) are predicated out with the same live-block discipline
+  as ``kernel.py::_block_live`` — dead pages do no MXU work.
+
+``seq_lens`` counts **all** valid cache positions *including* the current
+token (the engine scatters the new K/V at position ``seq_len - 1`` before
+calling attention), so the query position is ``seq_lens - 1`` and causality
+degenerates to the length mask.  ``interpret=True`` runs the identical
+kernel logic on CPU (CI parity tests vs ``chunked.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention.kernel import NEG_INF
+
+DEFAULT_PAGES_PER_SPLIT = 8
+
+
+def _page_live(page, block_size: int, seq_len, *, window: int):
+    """Does logical ``page`` hold any position the query may attend to?
+
+    Mirrors ``kernel.py::_block_live`` for the decode case (q_len == 1 at
+    position ``seq_len - 1``): a page is dead when it starts past the valid
+    length, or — with a sliding window — when its last position is already
+    left of the window."""
+    live = page * block_size < seq_len
+    if window > 0:
+        live &= (page + 1) * block_size - 1 > seq_len - 1 - window
+    return live
+
+
+# --------------------------------------------------------------------------- #
+# Reference (gather) path — also the CPU/XLA execution path for the engine
+# --------------------------------------------------------------------------- #
+
+def paged_attention_reference(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, block_tables: jax.Array,
+                              seq_lens: jax.Array, *, window: int = 0,
+                              scale: Optional[float] = None) -> jax.Array:
+    """Dense-gather oracle for the paged layout (fp32 softmax).
+
+    q: (B, H, D); k/v_pages: (P, bs, K, D*); block_tables: (B, NB) int32;
+    seq_lens: (B,) int32 valid positions incl. the current token.
+    Returns (B, H, Dv).  Rows with seq_len == 0 return garbage (masked
+    upstream) — padded engine slots are never read.
+    """
+    B, H, D = q.shape
+    P, bs, K, _ = k_pages.shape
+    Dv = v_pages.shape[-1]
+    g = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    T = block_tables.shape[1] * bs
+    k = k_pages[block_tables].reshape(B, T, K, D).astype(jnp.float32)
+    v = v_pages[block_tables].reshape(B, T, K, Dv).astype(jnp.float32)
+    qf = q.reshape(B, K, g, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k) * scale
+    t = jnp.arange(T)[None, :]
+    ok = t < seq_lens[:, None]
+    if window > 0:
+        ok &= t > (seq_lens[:, None] - 1) - window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return out.reshape(B, H, Dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Pallas kernel
+# --------------------------------------------------------------------------- #
+
+def _flash_decode_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref,
+                         m_ref, l_ref, acc_ref, m_scr, l_scr, acc_scr, *,
+                         scale: float, window: int, block_size: int,
+                         pages_per_split: int):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    seq_len = sl_ref[b]
+    page = si * pages_per_split + j
+    live = _page_live(page, block_size, seq_len, window=window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (g, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)       # (bs, Dv)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        t = page * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        ok = t < seq_len
+        if window > 0:
+            ok &= t > seq_len - 1 - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                              # (g, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == pages_per_split - 1)
+    def _done():
+        m_ref[0, 0, 0] = m_scr[...][:, 0]
+        l_ref[0, 0, 0] = l_scr[...][:, 0]
+        acc_ref[0, 0, 0] = acc_scr[...]
+
+
+def _decode_bkgd(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                 block_tables: jax.Array, seq_lens: jax.Array, window: int,
+                 scale: float, pages_per_split: int, interpret: bool
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Runs the split-KV kernel.  q: (B, K, g, D).  Returns the per-split
+    partials (m, l, acc) of shapes (B,K,S,g) / (B,K,S,g) / (B,K,S,g,Dv)."""
+    B, K, g, D = q.shape
+    bs = k_pages.shape[1]
+    Dv = v_pages.shape[-1]
+    nb = block_tables.shape[1]
+    pps = min(pages_per_split, nb)
+    num_splits = -(-nb // pps)
+
+    def page_of(si, j, bt, b):
+        # clamp overhang pages of the last split onto a valid table entry;
+        # they are predicated dead in the kernel (page*bs >= seq_len)
+        return bt[b, jnp.minimum(si * pps + j, nb - 1)]
+
+    grid = (B, K, num_splits, pps)
+    kernel = functools.partial(
+        _flash_decode_kernel, scale=scale, window=window, block_size=bs,
+        pages_per_split=pps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D),
+                         lambda b, h, si, j, bt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, si, j, bt, sl:
+                         (page_of(si, j, bt, b), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, Dv),
+                         lambda b, h, si, j, bt, sl:
+                         (page_of(si, j, bt, b), 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda b, h, si, j, bt, sl: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda b, h, si, j, bt, sl: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, 1, g, Dv),
+                         lambda b, h, si, j, bt, sl: (b, h, si, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, Dv), jnp.float32),
+        ],
+    )
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, num_splits, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, num_splits, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, num_splits, g, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pages, v_pages)
+    return m, l, acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "scale", "pages_per_split", "interpret"))
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       block_tables: jax.Array, seq_lens: jax.Array, *,
+                       window: int = 0, scale: Optional[float] = None,
+                       pages_per_split: int = DEFAULT_PAGES_PER_SPLIT,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Flash-decoding over paged KV.  q: (B, H, D); pages: (P, bs, K, D*);
+    block_tables: (B, NB) int32 page ids; seq_lens: (B,) int32 valid
+    positions including the current token.  Returns (B, H, Dv)."""
+    B, H, D = q.shape
+    K = k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    g = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    qg = q.reshape(B, K, g, D)
+    m, l, acc = _decode_bkgd(qg, k_pages, v_pages,
+                             block_tables.astype(jnp.int32),
+                             seq_lens.astype(jnp.int32),
+                             window, float(scale), pages_per_split,
+                             interpret)
+    # merge the split partials: standard flash-decoding logsumexp rescale.
+    # all-dead splits emit (m=-inf, l=0, acc=0) and vanish here.
+    g_m = jnp.max(m, axis=2)                                    # (B,K,g)
+    alpha = jnp.exp(m - g_m[:, :, None, :])                     # (B,K,S,g)
+    l_tot = jnp.sum(l * alpha, axis=2)                          # (B,K,g)
+    acc_tot = jnp.sum(acc * alpha[..., None], axis=2)           # (B,K,g,Dv)
+    out = acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+    return out.reshape(B, H, Dv).astype(q.dtype)

@@ -153,6 +153,69 @@ def init_group_cache(group: ScanGroup, cfg: ModelConfig, batch: int,
         lambda a: jnp.broadcast_to(a, (group.depth,) + a.shape).copy(), unit)
 
 
+# --------------------------------------------------------------------------- #
+# Decode (single token, paged KV cache — the serving-engine path)
+# --------------------------------------------------------------------------- #
+
+PAGED_SUBLAYERS = ("attn", "mlp", "moe")
+
+
+def init_paged_sublayer_cache(kind: str, cfg: ModelConfig, num_blocks: int,
+                              block_size: int, dtype=jnp.bfloat16) -> PyTree:
+    """Per-sublayer page pools.  Unlike the dense cache there is no batch
+    dim — sequences share the pool through their block tables."""
+    if kind == "attn":
+        K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {"k_pages": jnp.zeros((num_blocks, block_size, K, hd), dtype),
+                "v_pages": jnp.zeros((num_blocks, block_size, K, hd), dtype)}
+    if kind in ("mlp", "moe"):
+        return {}                                  # stateless
+    raise NotImplementedError(
+        f"paged decode supports sublayers {PAGED_SUBLAYERS}, got {kind!r} "
+        "(SSM/MLA/xattn caches are not token-paged)")
+
+
+def _sublayer_decode_paged(kind: str, p: PyTree, x: jax.Array, cache: PyTree,
+                           cfg: ModelConfig, ctx: Dict[str, Any]):
+    if kind == "attn":
+        from repro.models.layers import attn_decode_paged
+        y, kp, vp = attn_decode_paged(
+            p, x, cfg, k_pages=cache["k_pages"], v_pages=cache["v_pages"],
+            block_tables=ctx["block_tables"], seq_lens=ctx["seq_lens"],
+            positions=ctx["positions"],
+            impl=ctx.get("attn_impl", "gather"))
+        return y, {"k_pages": kp, "v_pages": vp}
+    if kind == "mlp":
+        return mlp_forward(p, x, cfg), cache
+    if kind == "moe":
+        y, _ = moe.moe_forward(p, x, cfg)
+        return y, cache
+    raise NotImplementedError(kind)
+
+
+def group_decode_paged(gparams: PyTree, group: ScanGroup, x: jax.Array,
+                       cache: PyTree, cfg: ModelConfig, ctx: Dict[str, Any]
+                       ) -> Tuple[jax.Array, PyTree]:
+    def unit(p_unit: PyTree, c_unit: PyTree, h: jax.Array):
+        new_c = {}
+        for j, kind in enumerate(group.sublayers):
+            key = f"s{j}_{kind}"
+            h, new_c[key] = _sublayer_decode_paged(kind, p_unit[key], h,
+                                                   c_unit[key], cfg, ctx)
+        return h, new_c
+
+    if group.depth == 1:
+        return unit(gparams, cache, x)
+
+    def body(h, xs):
+        p_unit, c_unit = xs
+        h, new_c = unit(p_unit, c_unit, h)
+        return h, new_c
+
+    h, new_cache = jax.lax.scan(body, x, (gparams, cache))
+    return h, new_cache
+
+
 def group_decode(gparams: PyTree, group: ScanGroup, x: jax.Array,
                  cache: PyTree, cfg: ModelConfig, ctx: Dict[str, Any]
                  ) -> Tuple[jax.Array, PyTree]:

@@ -269,6 +269,51 @@ def attn_decode(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, *,
     return y, cache_k, cache_v
 
 
+def attn_decode_paged(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, *,
+                      k_pages: jax.Array, v_pages: jax.Array,
+                      block_tables: jax.Array, seq_lens: jax.Array,
+                      positions: jax.Array, impl: str = "gather"):
+    """Single-token decode against a PAGED KV cache.  x: (B,1,d).
+
+    k/v_pages: (P, bs, K, D) shared block pools; block_tables: (B, NB)
+    int32 page ids; seq_lens: (B,) cache positions already written (the new
+    token lands at position ``seq_lens[b]``).  Inactive batch slots carry
+    ``seq_lens == 0`` and block tables full of the null page — their
+    scatter hits page 0 (never allocated) and their output is ignored.
+
+    Returns (y, new_k_pages, new_v_pages).
+    """
+    from repro.kernels.flash_attention.decode import (flash_decode_paged,
+                                                     paged_attention_reference)
+    B = x.shape[0]
+    bs = k_pages.shape[1]
+    h = norm(p["norm"], x, cfg)
+    q, k, v = _project_qkv(p, h, cfg)
+    q = positional(q, positions, cfg)
+    k = positional(k, positions, cfg)
+    # scatter the new K/V row into its page: block seq_len // bs, offset
+    # seq_len % bs.  Active slots own disjoint pages, so indices collide
+    # only on the null page (inactive slots) where any value is fine.
+    page_ids = jnp.take_along_axis(block_tables,
+                                   (seq_lens // bs)[:, None], axis=1)[:, 0]
+    offs = seq_lens % bs
+    k_pages = k_pages.at[page_ids, offs].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, offs].set(v[:, 0].astype(v_pages.dtype))
+    valid = seq_lens + 1                       # incl. the token just written
+    window = cfg.sliding_window
+    if impl == "pallas":
+        out = flash_decode_paged(q[:, 0].astype(jnp.float32),
+                                 k_pages, v_pages, block_tables, valid,
+                                 window=window)
+    else:
+        out = paged_attention_reference(q[:, 0].astype(jnp.float32),
+                                        k_pages, v_pages, block_tables,
+                                        valid, window=window)
+    out = out[:, None].astype(x.dtype)         # (B, 1, H, Dv)
+    y = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, k_pages, v_pages
+
+
 # --------------------------------------------------------------------------- #
 # MLP
 # --------------------------------------------------------------------------- #

@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import params as P
-from repro.models.blocks import (group_decode, group_forward, init_group_cache)
+from repro.models.blocks import (PAGED_SUBLAYERS, group_decode,
+                                 group_decode_paged, group_forward,
+                                 init_group_cache, init_paged_sublayer_cache)
 from repro.models.config import ModelConfig
 from repro.models.layers import norm
 from repro.models.params import _sinusoidal
@@ -266,6 +268,69 @@ def warm_cross_cache(params: PyTree, cfg: ModelConfig, cache: PyTree,
             cache[gkey][key] = {"k": k.astype(old["k"].dtype),
                                 "v": v.astype(old["v"].dtype)}
     return cache
+
+
+def paged_decode_supported(cfg: ModelConfig) -> bool:
+    """Whether the paged serving engine can run this architecture: every
+    decoder sublayer must be token-paged or stateless (attn/mlp/moe).
+    SSM recurrent state, MLA latent caches and warmed cross-attention are
+    not paged (their per-sequence state is O(1) or encoder-length)."""
+    if cfg.is_encoder_decoder:
+        return False
+    return all(kind in PAGED_SUBLAYERS
+               for g in P.decoder_groups(cfg) for kind in g.sublayers)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> PyTree:
+    """Per-layer page pools (no batch dim — sequences share the pool via
+    their block tables; block 0 is the null page, see serve.paged_cache)."""
+    cache: Dict[str, Any] = {}
+    for gi, g in enumerate(P.decoder_groups(cfg)):
+        unit = {f"s{j}_{kind}": init_paged_sublayer_cache(
+                    kind, cfg, num_blocks, block_size, dtype)
+                for j, kind in enumerate(g.sublayers)}
+        if g.depth > 1:
+            unit = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (g.depth,) + a.shape).copy(),
+                unit)
+        cache[f"g{gi}"] = unit
+    return cache
+
+
+def decode_step_paged(params: PyTree, cfg: ModelConfig, cache: PyTree,
+                      tokens: jax.Array, block_tables: jax.Array,
+                      seq_lens: jax.Array, *, attn_impl: str = "gather"
+                      ) -> Tuple[jax.Array, PyTree]:
+    """One decode step over a paged KV cache with PER-SEQUENCE positions.
+
+    tokens: (B, 1) int32; block_tables: (B, NB) int32 page ids; seq_lens:
+    (B,) int32 cache positions already written — the new token is written
+    at position ``seq_lens[b]`` and attends to ``seq_lens[b] + 1`` valid
+    positions.  Unlike :func:`decode_step` there is no shared scalar
+    ``index``: every sequence sits at its own offset, which is what
+    continuous batching schedules.  Returns (logits (B, vocab), new cache).
+    """
+    B = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens)
+    if "pos" in params["embed"]:
+        pos_tab = params["embed"]["pos"]
+        idx = jnp.clip(seq_lens, 0, pos_tab.shape[0] - 1)
+        x = x + jnp.take(pos_tab, idx, axis=0).astype(x.dtype)[:, None, :]
+    positions = seq_lens[:, None].astype(jnp.int32)          # (B, 1)
+    if cfg.pos_embedding == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    ctx: Dict[str, Any] = {"positions": positions,
+                           "block_tables": block_tables,
+                           "seq_lens": seq_lens,
+                           "attn_impl": attn_impl}
+    new_cache: Dict[str, Any] = {}
+    for gi, g in enumerate(P.decoder_groups(cfg)):
+        x, new_cache[f"g{gi}"] = group_decode_paged(
+            params["decoder"][f"g{gi}"], g, x, cache[f"g{gi}"], cfg, ctx)
+    h = norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params, cfg, h)
+    return logits[:, 0, :], new_cache
 
 
 def decode_step(params: PyTree, cfg: ModelConfig, cache: PyTree,

@@ -1,0 +1,322 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+Iteration-level (Orca-style) scheduling: every engine step runs ONE jitted
+``decode_step_paged`` over a fixed number of batch slots; each slot feeds
+either its next prompt token (prefill, teacher-forced) or its last sampled
+token (decode).  Prefill and decode therefore interleave freely inside a
+step, new requests are admitted the moment a slot and enough KV blocks are
+free, finished sequences are evicted (their blocks return to the pool) at
+the step boundary, and the compiled step function never changes shape —
+one compile for the whole serving session.
+
+Memory is managed by ``serve.paged_cache``: admission requires blocks for
+the full prompt plus one lookahead block; decode allocates incrementally,
+and on pool exhaustion the youngest sequence is preempted (its blocks are
+freed and it re-queues with its generated tokens folded into the prompt —
+vLLM's recompute preemption).
+
+Every step is priced through the component energy model
+(``core.energy.monitor``) exactly as the trainers do, and the run summary
+converts energy to operational CO2e via ``core.carbon.accounting``.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flops as F
+from repro.core.carbon.accounting import CarbonLedger
+from repro.core.energy.devices import TPU_V5E, DeviceSpec
+from repro.core.energy.monitor import ComponentModel, EnergyMonitor
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serve.paged_cache import PagedKVCache, blocks_for
+from repro.serve.sampling import SamplingParams, sample_tokens
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Request:
+    uid: str
+    prompt: List[int]
+    max_new: int
+    sampling: SamplingParams = SamplingParams()
+    eos_id: int = -1                  # < 0: never stops early
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8
+    block_size: int = 16
+    num_blocks: int = 128             # pool size (block 0 is the null page)
+    max_blocks_per_seq: int = 32
+    attn_impl: str = "gather"         # gather (XLA) | pallas (flash-decode)
+    cache_dtype: str = "bfloat16"
+    seed: int = 0
+
+
+@dataclass
+class Completion:
+    uid: str
+    prompt: List[int]
+    tokens: List[int] = field(default_factory=list)
+    preemptions: int = 0
+
+
+@dataclass
+class _Slot:
+    req: Request
+    fed: int = 0                      # tokens fed (prompt + sampled)
+    generated: List[int] = field(default_factory=list)
+    preemptions: int = 0
+
+    @property
+    def next_token(self) -> int:
+        if self.fed < len(self.req.prompt):
+            return self.req.prompt[self.fed]
+        return self.generated[self.fed - len(self.req.prompt)]
+
+
+class ServeEngine:
+    """Continuous-batching engine for one model replica."""
+
+    def __init__(self, params: PyTree, cfg: ModelConfig, ecfg: EngineConfig,
+                 *, device: DeviceSpec = TPU_V5E,
+                 intensity_kg_per_kwh: Optional[float] = None):
+        if not M.paged_decode_supported(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: paged serving needs attn/mlp/moe-only decoders "
+                "(SSM/MLA/encoder-decoder caches are not token-paged)")
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.device = device
+        dtype = jnp.dtype(ecfg.cache_dtype)
+        self.pages = M.init_paged_cache(cfg, ecfg.num_blocks,
+                                        ecfg.block_size, dtype)
+        self.kv = PagedKVCache(num_blocks=ecfg.num_blocks,
+                               block_size=ecfg.block_size,
+                               max_slots=ecfg.max_slots,
+                               max_blocks_per_seq=ecfg.max_blocks_per_seq)
+        self._slots: List[Optional[_Slot]] = [None] * ecfg.max_slots
+        self._waiting: Deque[Request] = deque()
+        self._preempt_counts: Dict[str, int] = {}
+        self._orig_prompts: Dict[str, List[int]] = {}
+        self._key = jax.random.PRNGKey(ecfg.seed)
+        self.completions: Dict[str, Completion] = {}
+        self.monitor = EnergyMonitor(ComponentModel.for_device(device))
+        self.ledger = CarbonLedger() if intensity_kg_per_kwh is None else \
+            CarbonLedger(intensity_kg_per_kwh=intensity_kg_per_kwh)
+        self.steps = 0
+        self.tokens_generated = 0
+        self._frag_tokens_peak = 0.0
+        self._util_peak = 0.0
+
+        from repro.train.trainer import donation_supported
+        donate = (1,) if donation_supported() else ()
+        impl = ecfg.attn_impl
+        self._step_fn = jax.jit(
+            lambda p, c, t, bt, sl: M.decode_step_paged(
+                p, cfg, c, t, bt, sl, attn_impl=impl),
+            donate_argnums=donate)
+
+        # per-block KV bytes across all layers (for peak-memory stats)
+        leaves = jax.tree.leaves(self.pages)
+        self.pool_bytes = int(sum(l.size * l.dtype.itemsize for l in leaves))
+        self.bytes_per_block = self.pool_bytes / ecfg.num_blocks
+
+    # ------------------------------------------------------------- scheduling
+    def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            # max_new >= 1 also guarantees admission is satisfiable: the
+            # submit bound below then covers can_admit's +1 lookahead block
+            raise ValueError(f"request {req.uid}: max_new must be >= 1")
+        need = blocks_for(len(req.prompt) + req.max_new, self.ecfg.block_size)
+        limit = min(self.ecfg.max_blocks_per_seq, self.kv.allocator.num_usable)
+        if need > limit:
+            raise ValueError(
+                f"request {req.uid}: {need} blocks needed, engine limit "
+                f"{limit} — raise num_blocks/max_blocks_per_seq")
+        self._orig_prompts[req.uid] = list(req.prompt)
+        self._waiting.append(req)
+
+    def _admit(self) -> None:
+        free = self.kv.free_slots()
+        while free and self._waiting \
+                and self.kv.can_admit(len(self._waiting[0].prompt)):
+            req = self._waiting.popleft()
+            slot = free.pop(0)
+            self.kv.open_slot(slot)
+            self._slots[slot] = _Slot(req)
+
+    def _preempt_youngest(self) -> bool:
+        """Free the least-progressed slot, folding its generated tokens
+        into a re-queued prompt (recompute preemption).  Returns False
+        when nothing is left to preempt."""
+        live = [i for i, s in enumerate(self._slots) if s is not None]
+        if not live:
+            return False
+        slot = min(live, key=lambda i: self._slots[i].fed)
+        s = self._slots[slot]
+        merged = Request(uid=s.req.uid,
+                         prompt=list(s.req.prompt) + list(s.generated),
+                         max_new=s.req.max_new - len(s.generated),
+                         sampling=s.req.sampling, eos_id=s.req.eos_id)
+        self.kv.close_slot(slot)
+        self._slots[slot] = None
+        self._waiting.appendleft(merged)
+        self._preempt_counts[merged.uid] = \
+            self._preempt_counts.get(merged.uid, 0) + 1
+        return True
+
+    def _ensure_capacity(self) -> None:
+        """Give every active slot a page for this step's token, preempting
+        the least-progressed sequence on pool exhaustion."""
+        for i in range(self.ecfg.max_slots):
+            while self._slots[i] is not None \
+                    and not self.kv.ensure_capacity(i):
+                if not self._preempt_youngest():
+                    raise MemoryError("paged pool exhausted with no "
+                                      "preemptable sequence")
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> int:
+        """Run one engine iteration; returns tokens committed this step."""
+        self._admit()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return 0
+        self._ensure_capacity()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return 0
+
+        t0 = time.perf_counter()
+        n = self.ecfg.max_slots
+        tokens = np.zeros((n, 1), np.int32)
+        temp = np.zeros((n,), np.float32)
+        topk = np.zeros((n,), np.int32)
+        for i in active:
+            s = self._slots[i]
+            tokens[i, 0] = s.next_token
+            temp[i] = s.req.sampling.temperature
+            topk[i] = s.req.sampling.top_k
+        bt = jnp.asarray(self.kv.device_tables())
+        sl = jnp.asarray(self.kv.seq_lens())
+
+        logits, self.pages = self._step_fn(self.params, self.pages,
+                                           jnp.asarray(tokens), bt, sl)
+        self._key, sub = jax.random.split(self._key)
+        sampled = np.asarray(sample_tokens(logits.astype(jnp.float32), sub,
+                                           jnp.asarray(temp),
+                                           jnp.asarray(topk)))
+
+        committed = 0
+        flops = hbm = 0.0
+        for i in active:
+            s = self._slots[i]
+            self.kv.commit_token(i)
+            cache_len = self.kv.table(i).num_tokens
+            flops += F.decode_flops(self.cfg, 1, cache_len)
+            hbm += F.kv_cache_bytes(self.cfg, 1, cache_len)
+            s.fed += 1
+            if s.fed >= len(s.req.prompt):          # this logit row counts
+                tok = int(sampled[i])
+                s.generated.append(tok)
+                self.tokens_generated += 1
+                committed += 1
+                done = (len(s.generated) >= s.req.max_new
+                        or (s.req.eos_id >= 0 and tok == s.req.eos_id))
+                if done:
+                    self._finish(i)
+        # weights stream once per step, caches once per active sequence
+        hbm += self.cfg.active_param_count() * 2
+        self.monitor.record_step(flops=flops, hbm_bytes=hbm,
+                                 duration_s=time.perf_counter() - t0)
+        # fragmentation is only meaningful while sequences are live, so
+        # sample it per step (stats() runs after everything is evicted)
+        st = self.kv.stats()
+        self._frag_tokens_peak = max(self._frag_tokens_peak,
+                                     st["frag_tokens"])
+        self._util_peak = max(self._util_peak, st["utilization"])
+        self.steps += 1
+        return committed
+
+    def _finish(self, slot: int) -> None:
+        s = self._slots[slot]
+        # after recompute preemption the slot's prompt carries previously
+        # generated tokens; the completion reports the ORIGINAL prompt and
+        # everything generated beyond it
+        orig = self._orig_prompts[s.req.uid]
+        full = list(s.req.prompt) + list(s.generated)
+        self.completions[s.req.uid] = Completion(
+            uid=s.req.uid, prompt=orig, tokens=full[len(orig):],
+            preemptions=self._preempt_counts.get(s.req.uid, 0))
+        self.kv.close_slot(slot)
+        self._slots[slot] = None
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._waiting) or any(s is not None for s in self._slots)
+
+    def reset_stats(self) -> None:
+        """Start a fresh measurement window (call after a warmup run so
+        compile time/energy stays out of the reported numbers).  Clears
+        completions, counters, the energy monitor, and the allocator /
+        fragmentation peaks — but not live sequences or the cache."""
+        self.completions.clear()
+        self.monitor.samples.clear()
+        self.monitor.estimates_j.clear()
+        self.steps = 0
+        self.tokens_generated = 0
+        self.wall_s = 0.0
+        self._frag_tokens_peak = 0.0
+        self._util_peak = 0.0
+        self.kv.allocator.peak_blocks_in_use = self.kv.allocator.blocks_in_use
+
+    # ------------------------------------------------------------------- run
+    def run(self, requests: Optional[List[Request]] = None,
+            max_steps: int = 100_000) -> Dict[str, Completion]:
+        for r in requests or []:
+            self.submit(r)
+        t0 = time.perf_counter()
+        steps = 0
+        while self.busy and steps < max_steps:
+            self.step()
+            steps += 1
+        jax.tree.leaves(self.pages)[0].block_until_ready()
+        self.wall_s = time.perf_counter() - t0
+        return self.completions
+
+    # ------------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, float]:
+        wall = getattr(self, "wall_s", 0.0)
+        out = {
+            "steps": float(self.steps),
+            "tokens_generated": float(self.tokens_generated),
+            "tokens_per_s": self.tokens_generated / wall if wall else 0.0,
+            "energy_j": self.monitor.total_j,
+            "j_per_token": (self.monitor.total_j
+                            / max(self.tokens_generated, 1)),
+            "pool_bytes": float(self.pool_bytes),
+            "peak_cache_bytes": (self.kv.allocator.peak_blocks_in_use
+                                 * self.bytes_per_block),
+            # per-step peaks: the instantaneous kv.stats() go to zero once
+            # every sequence is evicted at the end of a run
+            "frag_tokens_peak": self._frag_tokens_peak,
+            "utilization_peak": self._util_peak,
+            **self.kv.stats(),
+        }
+        kwh = self.monitor.total_wh / 1000.0
+        self.ledger.entries.clear()
+        self.ledger.add_operational_kwh("serve", kwh)
+        out["carbon_g"] = self.ledger.operational_kg * 1000.0
+        return out

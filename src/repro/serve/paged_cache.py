@@ -1,0 +1,191 @@
+"""Paged KV-cache bookkeeping: block allocator + per-sequence block tables.
+
+The dense ``model.init_cache`` layout sizes every sequence's cache to the
+worst-case length, so a batch of mixed-length requests pays
+``batch x max_len`` KV bytes even though most of that is never written.
+The serving engine instead carves each layer's KV storage into fixed-size
+**blocks** (``block_size`` tokens each, vLLM-style paging) and maps logical
+token positions to physical blocks through a per-sequence **block table**:
+
+* device side — per-attention-layer pools ``k_pages``/``v_pages`` of shape
+  ``(num_blocks, block_size, kv_heads, head_dim)`` (see
+  ``model.init_paged_cache``); block ids are shared across layers, so one
+  table drives every layer's gather,
+* host side — this module: a free-list :class:`BlockAllocator` plus
+  :class:`BlockTable` slot state (alloc on admission, append on decode,
+  free on eviction) with fragmentation / high-water statistics.
+
+Block id 0 is reserved as the **null block**: padded batch slots and
+unused block-table entries point at it, so the device-side scatter/gather
+is always in-bounds and inactive slots can never corrupt live pages.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+def blocks_for(num_tokens: int, block_size: int) -> int:
+    """Physical blocks needed to hold ``num_tokens`` cache positions."""
+    return -(-num_tokens // block_size)
+
+
+class BlockAllocator:
+    """LIFO free-list over block ids ``1..num_blocks-1`` (0 = null block)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO: recently-freed blocks are re-used first (warm pages)
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self.peak_blocks_in_use = 0
+
+    @property
+    def num_usable(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_usable - self.num_free
+
+    def can_alloc(self, n: int) -> bool:
+        return self.num_free >= n
+
+    def alloc(self, n: int = 1) -> List[int]:
+        """Pop ``n`` blocks; raises MemoryError when the pool is exhausted
+        (callers check :meth:`can_alloc` / admission first)."""
+        if not self.can_alloc(n):
+            raise MemoryError(
+                f"paged KV pool OOM: want {n} blocks, {self.num_free} free")
+        out = [self._free.pop() for _ in range(n)]
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b == NULL_BLOCK:
+                raise ValueError("cannot free the null block")
+            if b in self._free or not (0 < b < self.num_blocks):
+                raise ValueError(f"double/invalid free of block {b}")
+        self._free.extend(blocks)
+
+
+@dataclass
+class BlockTable:
+    """One sequence's logical->physical block mapping + its length."""
+
+    blocks: List[int] = field(default_factory=list)
+    num_tokens: int = 0                  # cache positions written so far
+
+    def allocated_tokens(self, block_size: int) -> int:
+        return len(self.blocks) * block_size
+
+
+class PagedKVCache:
+    """Host-side paging state for ``max_slots`` concurrent sequences.
+
+    Owns the allocator and one :class:`BlockTable` per slot, and renders
+    them into the dense ``(max_slots, max_blocks_per_seq)`` int32 table +
+    ``(max_slots,)`` length vector the device kernels consume.  The device
+    pools themselves live in the model pytree (``model.init_paged_cache``).
+    """
+
+    def __init__(self, *, num_blocks: int, block_size: int,
+                 max_slots: int, max_blocks_per_seq: int):
+        self.allocator = BlockAllocator(num_blocks, block_size)
+        self.block_size = block_size
+        self.max_slots = max_slots
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self._tables: List[Optional[BlockTable]] = [None] * max_slots
+
+    # ------------------------------------------------------------- slots
+    def free_slots(self) -> List[int]:
+        return [i for i, t in enumerate(self._tables) if t is None]
+
+    def table(self, slot: int) -> BlockTable:
+        t = self._tables[slot]
+        assert t is not None, f"slot {slot} not allocated"
+        return t
+
+    def can_admit(self, num_tokens: int) -> bool:
+        """Admission check: enough free blocks for ``num_tokens`` cache
+        positions (prompt + 1 lookahead so the first decode step cannot
+        OOM the moment a request is admitted)."""
+        need = blocks_for(num_tokens + 1, self.block_size)
+        return (need <= self.max_blocks_per_seq
+                and self.allocator.can_alloc(need))
+
+    def open_slot(self, slot: int) -> None:
+        assert self._tables[slot] is None, f"slot {slot} busy"
+        self._tables[slot] = BlockTable()
+
+    def ensure_capacity(self, slot: int) -> bool:
+        """Make sure the next token position for ``slot`` has a physical
+        block; returns False on pool OOM (caller preempts a sequence)."""
+        t = self.table(slot)
+        if t.num_tokens < t.allocated_tokens(self.block_size):
+            return True
+        if len(t.blocks) >= self.max_blocks_per_seq:
+            return False                     # sequence hit its table limit
+        if not self.allocator.can_alloc(1):
+            return False
+        t.blocks.extend(self.allocator.alloc(1))
+        return True
+
+    def commit_token(self, slot: int) -> None:
+        """Account one cache position written at ``num_tokens`` (call after
+        the device step that performed the write)."""
+        t = self.table(slot)
+        assert t.num_tokens < t.allocated_tokens(self.block_size), \
+            "commit_token without ensure_capacity"
+        t.num_tokens += 1
+
+    def close_slot(self, slot: int) -> None:
+        t = self.table(slot)
+        if t.blocks:
+            self.allocator.free(t.blocks)
+        self._tables[slot] = None
+
+    # ------------------------------------------------------------ device view
+    def device_tables(self) -> np.ndarray:
+        """(max_slots, max_blocks_per_seq) int32; unused entries -> null."""
+        out = np.full((self.max_slots, self.max_blocks_per_seq), NULL_BLOCK,
+                      np.int32)
+        for i, t in enumerate(self._tables):
+            if t is not None and t.blocks:
+                out[i, :len(t.blocks)] = t.blocks
+        return out
+
+    def seq_lens(self) -> np.ndarray:
+        """(max_slots,) int32 — cache positions already written per slot."""
+        return np.asarray(
+            [0 if t is None else t.num_tokens for t in self._tables],
+            np.int32)
+
+    # ------------------------------------------------------------ statistics
+    def stats(self) -> Dict[str, float]:
+        a = self.allocator
+        live = [t for t in self._tables if t is not None]
+        alloc_tok = sum(t.allocated_tokens(self.block_size) for t in live)
+        used_tok = sum(t.num_tokens for t in live)
+        return {
+            "blocks_total": float(a.num_usable),
+            "blocks_in_use": float(a.blocks_in_use),
+            "blocks_peak": float(a.peak_blocks_in_use),
+            "utilization": a.blocks_in_use / max(a.num_usable, 1),
+            # internal fragmentation: allocated-but-unwritten tail slots
+            "frag_tokens": float(alloc_tok - used_tok),
+            "frag_frac": (alloc_tok - used_tok) / max(alloc_tok, 1),
+        }

@@ -1,0 +1,41 @@
+"""Token sampling for the serving engine: greedy + temperature / top-k.
+
+One vectorized, jit-once sampler covers every request in a step: per-slot
+``temperature`` and ``top_k`` arrive as arrays, so mixed sampling configs
+share the compiled function.  ``temperature <= 0`` means greedy (argmax);
+``top_k <= 0`` disables the top-k filter.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0          # <= 0 -> greedy
+    top_k: int = 0                    # <= 0 -> no filter
+
+
+@jax.jit
+def sample_tokens(logits: jax.Array, key: jax.Array,
+                  temperature: jax.Array, top_k: jax.Array) -> jax.Array:
+    """logits: (B, V) f32; temperature/top_k: (B,).  Returns (B,) int32."""
+    B, V = logits.shape
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    # per-slot top-k: keep logits >= the k-th largest; k <= 0 keeps all
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(
+        sorted_desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=1)
+    keep = (scaled >= kth) | (top_k[:, None] <= 0)
+    masked = jnp.where(keep, scaled, NEG_INF)
+    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

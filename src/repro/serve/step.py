@@ -10,6 +10,7 @@ to the flash-decoding partial-max/sum all-reduce pattern.
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -19,6 +20,16 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 
 PyTree = Any
+
+
+@functools.lru_cache(maxsize=64)
+def jitted_decode_step(cfg: ModelConfig) -> Callable:
+    """One jitted decode step per config.  ``ModelConfig`` is a frozen
+    (hashable) dataclass, so repeated ``greedy_generate`` calls reuse the
+    compiled step instead of re-jitting a fresh lambda every call (each
+    new lambda is a distinct function to jax's jit cache, so the old code
+    recompiled on every generate)."""
+    return jax.jit(lambda p, c, t, i: M.decode_step(p, cfg, c, t, i))
 
 
 def make_serve_step(cfg: ModelConfig) -> Callable:
@@ -48,7 +59,7 @@ def greedy_generate(params: PyTree, cfg: ModelConfig, prompt: jax.Array,
     if enc is not None:
         # project encoder K/V once; decode steps read the warmed cache
         cache = M.warm_cross_cache(params, cfg, cache, enc)
-    step = jax.jit(lambda p, c, t, i: M.decode_step(p, cfg, c, t, i))
+    step = jitted_decode_step(cfg)
     toks = prompt
     logits = None
     for i in range(S):
