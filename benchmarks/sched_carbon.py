@@ -89,14 +89,48 @@ def run() -> BenchResult:
                          "energy_wh": r.energy_wh,
                          "rework": r.rework_steps,
                          "churn": r.membership_changes})
+        # recovery carbon attributed from bytes moved, no longer lumped
+        # into step time: the sim reports per-region checkpoint/restore
+        # traffic and its radio energy separately
+        res.rows.append({
+            "policy": f"sim/{name}/recovery",
+            "energy_wh": r.recovery_energy_wh,
+            "ckpt_GB": r.ckpt_bytes_written / 1e9,
+            "restore_GB": r.restore_bytes_moved / 1e9,
+            "restore_GB_by_region": "|".join(
+                f"{k}:{v/1e9:.2f}"
+                for k, v in sorted(r.restore_bytes_by_region.items()))})
     res.claims.append(Claim(
         "carbon-aware sim emits less CO2e for the same 200 steps (x)",
         r_blind.carbon_kg / max(r_aware.carbon_kg, 1e-12), 1.05, 500.0))
+    res.claims.append(Claim(
+        "sim attributes recovery traffic (checkpoint + restore bytes "
+        "priced via core.net, GB > 0)",
+        (r_blind.ckpt_bytes_written + r_blind.restore_bytes_moved) / 1e9,
+        1e-6, 1e6))
 
-    # 3. fault-tolerance Pareto
-    fm = FaultModel(lambda_per_device_hour=0.2, num_devices=15,
-                    step_time_s=30.0, ckpt_write_s=20.0,
-                    ckpt_restore_s=30.0, stage_recompute_s=120.0)
+    # 3. fault-tolerance Pareto, checkpoint terms priced from a real
+    #    2-region placement over the wide-area model (no constants)
+    from repro.core.net import Topology
+    from repro.core.placement import search_placement
+    from repro.core.sched.faults import priced_fault_model
+    ft_fleet = sim_fleet[:8]
+    topo = Topology.from_fleet(ft_fleet)
+    placement = search_placement(
+        cfg, [d.spec for d in ft_fleet], topology=topo,
+        nodes=[str(d.device_id) for d in ft_fleet], data_parallel=2,
+        batch=16, seq_len=512, microbatches=32, collective="hierarchical")
+    fm = priced_fault_model(cfg, placement, lambda_per_device_hour=0.2,
+                            step_time_s=30.0, stage_recompute_s=120.0,
+                            replication=1)
+    res.rows.append({"policy": "ft/priced-model",
+                     "write_s": fm.ckpt_write_s,
+                     "restore_naive_s": fm.ckpt_restore_s,
+                     "restore_elastic_s": fm.elastic_restore_s})
+    res.claims.append(Claim(
+        "placement-aware restore is strictly cheaper than naive "
+        "full restore in the priced fault model (x)",
+        fm.elastic_restore_s / fm.ckpt_restore_s, 0.0, 0.999))
     frontier = pareto_frontier(fm)
     for s in frontier:
         res.rows.append({"policy": f"ft/{s.name}", "slowdown": s.slowdown,

@@ -1,0 +1,16 @@
+"""Elastic placement-aware checkpointing.
+
+``ckpt`` does the file I/O (save / restore / reshard / prune),
+``spec.CheckpointSpec`` carries the placement-derived sharding contract,
+and ``elastic`` prices writes and bytes-actually-missing recovery over
+the wide-area topology for the orchestrator and the fault-strategy
+frontier.
+"""
+
+from repro.checkpoint import ckpt
+from repro.checkpoint.elastic import (TransferCost, recovery_cost,
+                                      state_layer_bytes, write_cost)
+from repro.checkpoint.spec import CheckpointSpec
+
+__all__ = ["ckpt", "CheckpointSpec", "TransferCost", "recovery_cost",
+           "state_layer_bytes", "write_cost"]

@@ -23,6 +23,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.checkpoint import (CheckpointSpec, recovery_cost,
+                              state_layer_bytes, write_cost)
 from repro.core.carbon.accounting import CarbonLedger
 from repro.core.carbon.intensity import IntensityTrace
 from repro.core.net import Topology
@@ -40,8 +42,10 @@ class SimConfig:
     seq_len: int = 512
     microbatches: int = 32
     checkpoint_interval: int = 50
-    ckpt_write_s: float = 20.0
-    ckpt_restore_s: float = 30.0
+    ckpt_replication: int = 1        # §5 neighbour shard copies per write
+    naive_restore: bool = False      # price recovery as full-state store
+                                     # fetches (the placement-blind
+                                     # baseline bench_elastic beats)
     churn_leave_per_hour: float = 0.2      # per active device
     churn_join_per_hour: float = 0.5       # per idle candidate
     carbon_threshold_g_per_gflop: float = float("inf")
@@ -65,6 +69,19 @@ class SimResult:
     topology_rebuilds: int = 0
     wan_bytes_total: float = 0.0
     last_placement: str = ""
+    # elastic-state accounting (bytes priced through core.net, not the
+    # old ckpt_write_s/ckpt_restore_s constants) — what lets
+    # benchmarks/sched_carbon attribute recovery carbon separately
+    ckpt_writes: int = 0
+    ckpt_write_s_total: float = 0.0
+    ckpt_bytes_written: float = 0.0
+    ckpt_bytes_by_region: Dict[str, float] = field(default_factory=dict)
+    restores: int = 0
+    restore_s_total: float = 0.0
+    restore_bytes_moved: float = 0.0
+    restore_wan_bytes: float = 0.0
+    restore_bytes_by_region: Dict[str, float] = field(default_factory=dict)
+    recovery_energy_wh: float = 0.0     # radio energy of writes+restores
 
 
 class Orchestrator:
@@ -139,6 +156,27 @@ class Orchestrator:
         self._dt = 1.0
         trace: List[Dict] = []
 
+        # elastic state: where shard copies currently sit (live placement
+        # nodes; checkpoint writes add §5 neighbour replication), and the
+        # per-layer / placement-independent byte split the recovery
+        # pricing slices by
+        layer_b, global_b = state_layer_bytes(cfg)
+        state_spec: Optional[CheckpointSpec] = None
+        ckpt_writes = 0
+        ckpt_write_s_total = 0.0
+        ckpt_bytes_written = 0.0
+        ckpt_by_region: Dict[str, float] = {}
+        restores = 0
+        restore_s_total = 0.0
+        restore_bytes_moved = 0.0
+        restore_wan = 0.0
+        restore_by_region: Dict[str, float] = {}
+        recovery_energy_wh = 0.0
+
+        def _merge(dst: Dict[str, float], src: Dict[str, float]) -> None:
+            for k, v in src.items():
+                dst[k] = dst.get(k, 0.0) + v
+
         # initial admission
         hour = sim.start_hour_utc
         self._dt = 3600.0
@@ -166,6 +204,33 @@ class Orchestrator:
                     nodes=[str(d.device_id) for d in self.active],
                     batch=sim.batch, seq_len=sim.seq_len,
                     microbatches=sim.microbatches, collective="ring")
+                if state_spec is not None:
+                    # the new placement must be fed the training state:
+                    # price the bytes ACTUALLY missing (survivors keep
+                    # their shards; joiners fetch their layer ranges
+                    # from the nearest holder) through the wide-area
+                    # model — this replaces the old ckpt_restore_s
+                    # constant
+                    rc = recovery_cost(topo, placement,
+                                       old_spec=state_spec,
+                                       layer_bytes=layer_b,
+                                       global_bytes=global_b,
+                                       naive=sim.naive_restore)
+                    t += rc.time_s
+                    restores += 1
+                    restore_s_total += rc.time_s
+                    restore_bytes_moved += rc.bytes_moved
+                    restore_wan += rc.wan_bytes
+                    _merge(restore_by_region, rc.per_region_bytes)
+                    energy_wh += rc.energy_wh
+                    recovery_energy_wh += rc.energy_wh
+                    ci_now = self.traces.setdefault(
+                        self.active[0].region,
+                        IntensityTrace(self.active[0].region)).at_hour(hour)
+                    self.ledger.add_operational_wh(
+                        f"restore{steps}", rc.energy_wh, intensity=ci_now)
+                # the live state now sits on the new placement's nodes
+                state_spec = CheckpointSpec.from_placement(placement, 0)
                 plan = dtfm.plan_placement(
                     cfg, placement,
                     batch=sim.batch, seq_len=sim.seq_len,
@@ -202,9 +267,23 @@ class Orchestrator:
             self.ledger.add_operational_wh(f"step{steps}", e_wh,
                                            intensity=ci)
 
-            # checkpoint overhead
+            # checkpoint overhead: local snapshots are free; the network
+            # pays for §5 neighbour replication plus the durable store
+            # upload, priced over the current topology
             if steps - last_ckpt_step >= sim.checkpoint_interval:
-                t += sim.ckpt_write_s
+                ck_spec = CheckpointSpec.from_placement(
+                    placement, sim.ckpt_replication)
+                wc = write_cost(topo, placement, ck_spec, layer_b, global_b)
+                t += wc.time_s
+                ckpt_writes += 1
+                ckpt_write_s_total += wc.time_s
+                ckpt_bytes_written += wc.bytes_moved
+                _merge(ckpt_by_region, wc.per_region_bytes)
+                energy_wh += wc.energy_wh
+                recovery_energy_wh += wc.energy_wh
+                self.ledger.add_operational_wh(f"ckpt{steps}", wc.energy_wh,
+                                               intensity=ci)
+                state_spec = ck_spec
                 last_ckpt_step = steps
 
             # churn
@@ -218,16 +297,17 @@ class Orchestrator:
             changes += changes_now
             members_now = {d.device_id for d in self.active}
             if members_before - members_now:
-                # a member LEFT (joins don't lose state): restore from
-                # the last checkpoint and recompute the lost steps —
-                # charged as extra wall time and energy, not by
-                # rewinding the step counter (a rewind livelocks under
-                # sustained churn: expected progress hits zero before
-                # the next checkpoint)
+                # a member LEFT (joins don't lose state): recompute the
+                # lost steps — charged as extra wall time and energy,
+                # not by rewinding the step counter (a rewind livelocks
+                # under sustained churn: expected progress hits zero
+                # before the next checkpoint).  The state-movement cost
+                # of the restore itself is priced at the replan below,
+                # from the bytes the new placement is actually missing.
                 lost = min(steps - last_ckpt_step,
                            sim.checkpoint_interval) // 2
                 rework += lost
-                t += sim.ckpt_restore_s + lost * step_s
+                t += lost * step_s
                 energy_wh += lost * e_wh
                 comm_s_total += lost * plan.comm_s_per_step
                 comm_energy_wh += lost * e_comm_wh
@@ -266,6 +346,16 @@ class Orchestrator:
             topology_rebuilds=self.topology_rebuilds,
             wan_bytes_total=wan_bytes_total,
             last_placement=last_strategy,
+            ckpt_writes=ckpt_writes,
+            ckpt_write_s_total=ckpt_write_s_total,
+            ckpt_bytes_written=ckpt_bytes_written,
+            ckpt_bytes_by_region=ckpt_by_region,
+            restores=restores,
+            restore_s_total=restore_s_total,
+            restore_bytes_moved=restore_bytes_moved,
+            restore_wan_bytes=restore_wan,
+            restore_bytes_by_region=restore_by_region,
+            recovery_energy_wh=recovery_energy_wh,
         )
 
 

@@ -65,8 +65,23 @@ def resolve_boundaries(cfg: ModelConfig, stages: Boundaries) -> List[int]:
     return bounds
 
 
-def _stage_counts(bounds: List[int]) -> List[int]:
+def stage_slices(bounds: Sequence[int]) -> List[Tuple[int, int]]:
+    """Boundary list -> per-stage [start, stop) layer spans.
+
+    This is the ONE place stage boundary math lives: the pipeline executor
+    pads/masks from it and :mod:`repro.checkpoint` shards/reshards
+    checkpoints with it, so a checkpoint written under one placement
+    re-slices exactly onto the stages another placement executes.
+    """
+    return list(zip(bounds[:-1], bounds[1:]))
+
+
+def stage_counts(bounds: Sequence[int]) -> List[int]:
+    """Per-stage layer counts for a boundary list."""
     return [b - a for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+_stage_counts = stage_counts          # internal alias (pre-export name)
 
 
 def stage_layer_mask(cfg: ModelConfig, stages: Boundaries) -> jax.Array:

@@ -34,6 +34,12 @@ def main() -> None:
                     help="comma dims for a (data, model) mesh")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest complete checkpoint in "
+                         "--checkpoint-dir before training; the "
+                         "checkpoint may come from a DIFFERENT fleet "
+                         "placement (layer-sliced shards are re-sliced "
+                         "onto whatever runs now)")
     ap.add_argument("--device", default="laptop-m2pro",
                     help="energy-model device for the carbon ledger")
     args = ap.parse_args()
@@ -57,10 +63,13 @@ def main() -> None:
 
     monitor = EnergyMonitor(ComponentModel.for_device(
         get_device(args.device)))
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume needs --checkpoint-dir")
     tc = TrainerConfig(steps=args.steps, batch=args.batch, seq_len=args.seq,
                        microbatches=args.microbatches, remat=args.remat,
                        checkpoint_dir=args.checkpoint_dir,
-                       checkpoint_every=args.checkpoint_every)
+                       checkpoint_every=args.checkpoint_every,
+                       resume=args.resume)
 
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))

@@ -67,6 +67,10 @@ class LocalSGDConfig:
     outer_momentum: float = 0.9
     nesterov: bool = True
     compress: Optional[CompressConfig] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every_rounds: int = 0
+    checkpoint_replication: int = 1  # §5 neighbour shard copies
+    resume: bool = False             # restore newest complete ckpt first
 
 
 @dataclass
@@ -75,6 +79,7 @@ class LocalSGDResult:
     round_losses: List[float] = field(default_factory=list)  # fleet mean
     final_loss: float = float("nan")
     rounds: int = 0
+    resumed_from_round: int = 0              # 0 when starting fresh
     steps_per_s: float = 0.0
     sync_wire_bytes_per_round: int = 0
     comm_time_s_per_round: float = 0.0       # modelled, if topology given
@@ -150,6 +155,23 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     global_params = PM.init_params(cfg, rng)
     momentum = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                             global_params)
+    start_round = 0
+    if ls.resume and ls.checkpoint_dir:
+        # elastic resume: the DiLoCo state (global params + outer
+        # Nesterov momentum) restores from any layout the previous
+        # fleet wrote — layer-sliced under different stage boundaries
+        # included — so churn between runs loses nothing but the
+        # inner-optimizer moments (which DiLoCo re-warms locally)
+        from repro.checkpoint import ckpt
+        found = ckpt.latest_complete_step(ls.checkpoint_dir)
+        if found is not None:
+            state = ckpt.restore(
+                ls.checkpoint_dir,
+                {"params": global_params, "outer_m": momentum}, step=found)
+            global_params, momentum = state["params"], state["outer_m"]
+            start_round = found
+            print(f"[local_sgd] resumed from round {found} "
+                  f"({ls.checkpoint_dir})")
 
     from repro.train.trainer import effective_donate, make_jit_train_step
     step_fn = make_jit_train_step(cfg, tc, opt_cfg)
@@ -212,6 +234,20 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         # every replica restarts the next round from the new global
         # params; inner optimizer state persists (DiLoCo)
         locals_ = [global_params] * R
+        if ls.checkpoint_dir and ls.checkpoint_every_rounds \
+                and (rnd + 1) % ls.checkpoint_every_rounds == 0:
+            from repro.checkpoint import ckpt
+            state = {"params": global_params, "outer_m": momentum}
+            if placement is not None:
+                # stage slots shard the outer state over the spec's
+                # replica/region groups (each slot's nodes hold its
+                # layer range; replication adds §5 neighbour copies)
+                ckpt.save_for_placement(
+                    ls.checkpoint_dir, start_round + rnd + 1, state,
+                    placement, replication=ls.checkpoint_replication)
+            else:
+                ckpt.save(ls.checkpoint_dir, start_round + rnd + 1, state)
+            ckpt.prune(ls.checkpoint_dir)
         # ONE host sync per round: replica-0 per-step losses + fleet mean
         fetched = jax.device_get({"r0": r0_losses, "round": round_loss_dev})
         res.losses.extend(float(x) for x in fetched["r0"])
@@ -223,6 +259,7 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
 
     wall = time.time() - t0
     res.rounds = rounds
+    res.resumed_from_round = start_round
     res.final_loss = res.round_losses[-1]
     res.steps_per_s = rounds * ls.inner_steps * R / wall
     res.sync_wire_bytes_per_round = wire_bytes(

@@ -55,6 +55,11 @@ class TrainerConfig:
     log_every: int = 10
     checkpoint_every: int = 0
     checkpoint_dir: Optional[str] = None
+    checkpoint_placement: Any = None   # PlacementSpec/CheckpointSpec: save
+                                       # layer-sliced by stage (elastic)
+    checkpoint_replication: int = 0    # §5 neighbour shard copies
+    resume: bool = False        # restore the newest complete checkpoint
+                                # (any layout/boundaries) before training
     remat: str = "none"         # matches the make_train_step default
     attn_impl: str = "chunked"  # "naive" | "chunked" | "pallas"
     microbatches: int = 1
@@ -72,6 +77,7 @@ class TrainerResult:
     compile_time_s: float = 0.0         # first-step (trace+compile+run) time
     energy_wh: float = 0.0
     final_loss: float = float("nan")
+    resumed_from_step: int = 0          # 0 when starting fresh
 
 
 def donation_supported() -> bool:
@@ -106,6 +112,21 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
     rng = jax.random.PRNGKey(tc.seed)
     params = PM.init_params(cfg, rng)
     opt_state = adamw.init_opt_state(params, opt_cfg)
+    start_step = 0
+    if tc.resume and tc.checkpoint_dir:
+        # elastic resume: the checkpoint may have been written by ANY
+        # placement (layer-sliced with different stage boundaries, or
+        # leaf-modulo) — restore re-slices via its manifest either way,
+        # so a changed fleet picks up exactly where the old one stopped
+        found = ckpt.latest_complete_step(tc.checkpoint_dir)
+        if found is not None:
+            state = ckpt.restore(tc.checkpoint_dir,
+                                 {"params": params, "opt": opt_state},
+                                 step=found)
+            params, opt_state = state["params"], state["opt"]
+            start_step = found
+            print(f"[trainer] resumed from step {found} "
+                  f"({tc.checkpoint_dir})")
     step_fn = make_jit_train_step(cfg, tc, opt_cfg)
     data = make_batch_fn(cfg, tc.batch, tc.seq_len, tc.seed)
 
@@ -156,8 +177,14 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
                   f"lr {float(host['lr']):.2e}")
         if tc.checkpoint_every and tc.checkpoint_dir \
                 and (step + 1) % tc.checkpoint_every == 0:
-            ckpt.save(tc.checkpoint_dir, step + 1,
-                      {"params": params, "opt": opt_state})
+            state = {"params": params, "opt": opt_state}
+            if tc.checkpoint_placement is not None:
+                ckpt.save_for_placement(
+                    tc.checkpoint_dir, start_step + step + 1, state,
+                    tc.checkpoint_placement,
+                    replication=tc.checkpoint_replication)
+            else:
+                ckpt.save(tc.checkpoint_dir, start_step + step + 1, state)
             ckpt.prune(tc.checkpoint_dir)
     if pending:
         fetched = jax.device_get(pending)           # one bulk sync at exit
@@ -170,6 +197,7 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
     else:
         result.steady_steps_per_s = result.steps_per_s
     result.final_loss = result.losses[-1]
+    result.resumed_from_step = start_step
     if monitor is not None:
         result.energy_wh = monitor.total_wh
     return result

@@ -64,3 +64,72 @@ def test_checkpoint_prune_keeps_latest(tmp_path):
     steps = sorted(int(p.name.split("_")[1])
                    for p in tmp_path.glob("step_*"))
     assert steps == [3, 4]
+
+
+def test_checkpoint_partial_write_raises_then_merges(tmp_path):
+    """One of two leaf-modulo writers crashed: restore names every
+    missing file in ONE error; writing the second shard heals it."""
+    cfg = opt_config("opt-125m").reduced(num_layers=2, d_model=64,
+                                         vocab_size=64)
+    params = P.init_params(cfg, jax.random.PRNGKey(2))
+    ckpt.save(str(tmp_path), 9, {"p": params}, num_shards=2, shard_id=0)
+    with pytest.raises(ckpt.IncompleteCheckpointError) as ei:
+        ckpt.restore(str(tmp_path), {"p": params}, step=9)
+    msg = str(ei.value)
+    assert "incomplete" in msg and "shard 1" in msg and ".npy" in msg
+    assert ckpt.latest_complete_step(str(tmp_path)) is None
+    ckpt.save(str(tmp_path), 9, {"p": params}, num_shards=2, shard_id=1)
+    assert ckpt.latest_complete_step(str(tmp_path)) == 9
+    state = ckpt.restore(str(tmp_path), {"p": params})
+    for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(state["p"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_bf16_roundtrip_bitexact(tmp_path):
+    """bf16 leaves persist via the uint16 bit-pattern view and restore
+    bit-identically with the bf16 dtype (no float casting detour)."""
+    tree = {"w": jnp.arange(37, dtype=jnp.float32).astype(jnp.bfloat16)
+            * jnp.bfloat16(0.1),
+            "b": jnp.ones((3, 5), jnp.bfloat16),
+            "f32": jnp.linspace(0, 1, 11, dtype=jnp.float32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    back = ckpt.restore(str(tmp_path), tree)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype, k
+        a = np.asarray(tree[k])
+        b = np.asarray(back[k])
+        if a.dtype.kind == "V":
+            a, b = a.view(np.uint16), b.view(np.uint16)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_prune_is_shard_aware(tmp_path):
+    """Incomplete steps never count toward keep; the newest COMPLETE step
+    survives; a newer in-flight (incomplete) write is left alone; dead
+    older partial writes are removed."""
+    cfg = opt_config("opt-125m").reduced(num_layers=2, d_model=64,
+                                         vocab_size=64)
+    params = P.init_params(cfg, jax.random.PRNGKey(0))
+    tree = {"p": params}
+    ckpt.save(str(tmp_path), 1, tree)                       # complete
+    ckpt.save(str(tmp_path), 2, tree, num_shards=2, shard_id=0)  # dead
+    ckpt.save(str(tmp_path), 3, tree)                       # complete
+    ckpt.save(str(tmp_path), 4, tree, num_shards=2, shard_id=1)  # inflight
+    ckpt.prune(str(tmp_path), keep=1)
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]          # 3 = newest complete, 4 = in-flight
+    assert ckpt.latest_complete_step(str(tmp_path)) == 3
+    # restore with no explicit step skips the incomplete newest
+    state = ckpt.restore(str(tmp_path), tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_restore_rejects_mismatched_tree(tmp_path):
+    cfg = opt_config("opt-125m").reduced(num_layers=2, d_model=64,
+                                         vocab_size=64)
+    params = P.init_params(cfg, jax.random.PRNGKey(1))
+    ckpt.save(str(tmp_path), 1, {"p": params})
+    with pytest.raises(ValueError, match="does not match"):
+        ckpt.restore(str(tmp_path), {"other": params})

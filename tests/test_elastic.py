@@ -1,0 +1,334 @@
+"""Elastic state contract: placement-aware checkpoint sharding, live
+resharding across stage boundaries, priced recovery, trainer/local-SGD
+resume."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointSpec, ckpt, recovery_cost,
+                              state_layer_bytes, write_cost)
+from repro.configs.opt import opt_config
+from repro.core.energy.devices import LAPTOP_M2PRO, SMARTPHONE_SD888
+from repro.core.net import NetParams, Topology
+from repro.core.placement import search_placement
+from repro.core.sched.carbon_aware import FleetDevice
+from repro.models import params as P
+from repro.optim import adamw
+
+L = 6
+
+
+def _cfg():
+    return opt_config("opt-125m").reduced(num_layers=L, d_model=64,
+                                          vocab_size=64)
+
+
+def _state(cfg, seed=0):
+    params = P.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw.init_opt_state(params, adamw.OptConfig())
+    return {"params": params, "opt": opt}
+
+
+def _assert_trees_bitexact(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        xa, ya = np.asarray(x), np.asarray(y)
+        if xa.dtype.kind == "V":
+            xa, ya = xa.view(np.uint16), ya.view(np.uint16)
+        np.testing.assert_array_equal(xa, ya)
+
+
+def _two_region_fleet(n=8):
+    fleet = []
+    for i in range(n):
+        region = ("europe", "north_america")[i % 2]
+        spec = (LAPTOP_M2PRO, SMARTPHONE_SD888)[(i // 2) % 2]
+        fleet.append(FleetDevice(spec=spec, region=region, device_id=i))
+    return fleet
+
+
+def _placement(cfg, fleet, dp=2):
+    topo = Topology.from_fleet(fleet, params=NetParams(wan_bw_Bps=5e6))
+    return search_placement(
+        cfg, [d.spec for d in fleet], topology=topo,
+        nodes=[str(d.device_id) for d in fleet], data_parallel=dp,
+        batch=8, seq_len=64, microbatches=2, collective="hierarchical")
+
+
+# ------------------------------------------------------------------- spec
+def test_spec_from_placement_boundaries_and_holders():
+    cfg = _cfg()
+    fleet = _two_region_fleet()
+    pl = _placement(cfg, fleet)
+    spec = CheckpointSpec.from_placement(pl, replication=1)
+    assert list(spec.boundaries) == pl.boundaries
+    assert spec.num_shards == pl.num_stages
+    # every replica's stage-s node holds shard s...
+    for s in range(spec.num_shards):
+        for pipe in pl.pipelines:
+            assert pipe[s].node in spec.holders[s]
+        # ...and with replication=1 the next stage's nodes hold it too
+        nxt = (s + 1) % spec.num_shards
+        for pipe in pl.pipelines:
+            assert pipe[nxt].node in spec.holders[s]
+
+
+def test_spec_validates():
+    with pytest.raises(ValueError):
+        CheckpointSpec(L, (0, 3, 3, L))          # duplicate boundary
+    with pytest.raises(ValueError):
+        CheckpointSpec(L, (1, L))                # must start at 0
+    with pytest.raises(ValueError):
+        CheckpointSpec(L, (0, 3, L), replication=2)   # r > S-1
+
+
+# --------------------------------------------------------------- reshard
+def test_restore_onto_different_boundaries(tmp_path):
+    """A 3-stage checkpoint restores identically through any new
+    placement's boundaries — the manifest, not the caller, says how the
+    layer arrays were sliced."""
+    cfg = _cfg()
+    tree = _state(cfg)
+    ckpt.save_for_placement(str(tmp_path), 5, tree,
+                            CheckpointSpec(L, (0, 2, 4, L)))
+    for bounds in ((0, 3, L), (0, L), (0, 1, 2, 3, 4, 5, L)):
+        back = ckpt.restore_for_placement(str(tmp_path), list(bounds), tree)
+        _assert_trees_bitexact(tree, back)
+
+
+def test_reshard_roundtrip_bitexact(tmp_path):
+    cfg = _cfg()
+    tree = _state(cfg)
+    d1, d2, d3 = (tmp_path / x for x in ("a", "b", "c"))
+    ckpt.save_for_placement(str(d1), 7, tree,
+                            CheckpointSpec(L, (0, 2, 4, L), replication=1))
+    ckpt.reshard(str(d1), CheckpointSpec(L, (0, 3, L)), tree,
+                 out_directory=str(d2))
+    ckpt.reshard(str(d2), CheckpointSpec(L, (0, 2, 4, L)), tree,
+                 out_directory=str(d3))
+    _assert_trees_bitexact(tree, ckpt.restore(str(d3), tree))
+    # the resharded copy keeps the original step number
+    assert ckpt.latest_step(str(d2)) == 7
+
+
+def test_stage_partial_restore_matches_pipeline_slices(tmp_path):
+    """restore_for_placement(stage=s) returns exactly the layer span the
+    pipeline executor would stack for that stage — one boundary math."""
+    from repro.distributed.pipeline import stage_slices
+    cfg = _cfg()
+    tree = _state(cfg)
+    ckpt.save_for_placement(str(tmp_path), 1, tree,
+                            CheckpointSpec(L, (0, 2, 4, L)))
+    new_bounds = [0, 3, L]
+    full = ckpt.restore(str(tmp_path), tree)
+    for s, (a, b) in enumerate(stage_slices(new_bounds)):
+        part = ckpt.restore_for_placement(str(tmp_path), new_bounds, tree,
+                                          stage=s)
+        wq_full = np.asarray(
+            full["params"]["decoder"]["g0"]["s0_attn"]["wq"])
+        wq_part = np.asarray(
+            part["params"]["decoder"]["g0"]["s0_attn"]["wq"])
+        assert wq_part.shape[0] == b - a
+        np.testing.assert_array_equal(wq_part, wq_full[a:b])
+        # placement-independent leaves come back whole
+        assert np.asarray(part["params"]["embed"]["tok"]).shape == \
+            np.asarray(full["params"]["embed"]["tok"]).shape
+
+
+def test_stage_partial_restore_from_legacy_layout(tmp_path):
+    """stage= also crops checkpoints written by the legacy leaf-modulo
+    save (whole-leaf files; the crop happens after the read)."""
+    cfg = _cfg()
+    tree = _state(cfg)
+    ckpt.save(str(tmp_path), 1, tree)
+    part = ckpt.restore_for_placement(str(tmp_path), [0, 2, L], tree,
+                                      stage=0)
+    wq = np.asarray(part["params"]["decoder"]["g0"]["s0_attn"]["wq"])
+    full = np.asarray(tree["params"]["decoder"]["g0"]["s0_attn"]["wq"])
+    np.testing.assert_array_equal(wq, full[:2])
+
+
+def test_save_for_placement_replication_override(tmp_path):
+    """An explicit nonzero replication= beats the spec's own value."""
+    import json
+    cfg = _cfg()
+    tree = _state(cfg)
+    ckpt.save_for_placement(str(tmp_path), 1, tree,
+                            CheckpointSpec(L, (0, 2, 4, L)), replication=1)
+    m = json.loads((tmp_path / "step_00000001"
+                    / "manifest_0.json").read_text())
+    assert m["replication"] == 1
+
+
+def test_replicated_shards_survive_writer_loss(tmp_path):
+    """§5 neighbour replication: with replication=1 the union minus any
+    single writer still restores completely."""
+    cfg = _cfg()
+    tree = _state(cfg)
+    spec = CheckpointSpec(L, (0, 2, 4, L), replication=1)
+    # writer 1 crashed before writing anything
+    for shard in (0, 2):
+        ckpt.save_sharded(str(tmp_path), 3, tree, spec, shard)
+    _assert_trees_bitexact(tree, ckpt.restore(str(tmp_path), tree))
+    # without replication the same crash is detected, loudly
+    spec0 = CheckpointSpec(L, (0, 2, 4, L))
+    for shard in (0, 2):
+        ckpt.save_sharded(str(tmp_path / "r0"), 3, tree, spec0, shard)
+    with pytest.raises(ckpt.IncompleteCheckpointError, match="shard 1"):
+        ckpt.restore(str(tmp_path / "r0"), tree)
+
+
+# ---------------------------------------------------------------- pricing
+def test_recovery_cheaper_than_naive_and_free_for_survivors():
+    cfg = opt_config("opt-125m")
+    fleet = _two_region_fleet()
+    pl = _placement(cfg, fleet)
+    layer_b, global_b = state_layer_bytes(cfg)
+    spec = CheckpointSpec.from_placement(pl, replication=1)
+    topo = pl.topology
+    # restoring onto the SAME placement moves zero bytes (everyone
+    # already holds their shard)
+    same = recovery_cost(topo, pl, old_spec=spec, layer_bytes=layer_b,
+                         global_bytes=global_b)
+    assert same.bytes_moved == 0.0 and same.time_s == 0.0
+    # churn: a device leaves, the new placement pays only missing bytes
+    survivors = fleet[1:]
+    topo2 = Topology.from_fleet(survivors,
+                                params=NetParams(wan_bw_Bps=5e6))
+    pl2 = _placement(cfg, survivors)
+    kw = dict(old_spec=spec, layer_bytes=layer_b, global_bytes=global_b)
+    aware = recovery_cost(topo2, pl2, **kw)
+    naive = recovery_cost(topo2, pl2, naive=True, **kw)
+    assert 0.0 < aware.bytes_moved < naive.bytes_moved
+    assert aware.wan_bytes < naive.wan_bytes
+    assert aware.time_s < naive.time_s
+    assert naive.wan_bytes == naive.bytes_moved      # store is WAN
+
+
+def test_write_cost_scales_with_replication():
+    cfg = opt_config("opt-125m")
+    pl = _placement(cfg, _two_region_fleet())
+    layer_b, global_b = state_layer_bytes(cfg)
+    topo = pl.topology
+    costs = [write_cost(topo, pl,
+                        CheckpointSpec.from_placement(pl, r),
+                        layer_b, global_b)
+             for r in range(pl.num_stages)]
+    for a, b in zip(costs[:-1], costs[1:]):
+        assert b.bytes_moved > a.bytes_moved     # each copy costs bytes
+    assert costs[0].bytes_moved > 0              # durable upload always
+
+
+# ----------------------------------------------------------- orchestrator
+def test_orchestrator_accounts_recovery_bytes():
+    from repro.core.sched.orchestrator import (Orchestrator, SimConfig,
+                                               make_fleet)
+    cfg = opt_config("opt-125m")
+
+    def run(naive):
+        fl = make_fleet({"laptop-m2pro": 3, "smartphone-sd888": 4},
+                        regions=("europe", "north_america"), seed=2)
+        return Orchestrator(cfg, fl, SimConfig(
+            total_steps=60, seed=5, checkpoint_interval=15,
+            naive_restore=naive)).run()
+
+    aware, naive = run(False), run(True)
+    assert aware.ckpt_writes >= 1
+    assert aware.ckpt_bytes_written > 0 and aware.ckpt_write_s_total > 0
+    assert set(aware.ckpt_bytes_by_region) >= {"store"}
+    # identical churn trajectory (pricing consumes no randomness)...
+    assert aware.membership_changes == naive.membership_changes
+    assert aware.restores == naive.restores
+    # ...but the aware restore moves fewer bytes and less wall time
+    if aware.restores:
+        assert aware.restore_bytes_moved < naive.restore_bytes_moved
+        assert aware.restore_s_total <= naive.restore_s_total
+        assert aware.recovery_energy_wh > 0
+        assert sum(aware.restore_bytes_by_region.values()) == \
+            pytest.approx(aware.restore_bytes_moved)
+
+
+def test_priced_fault_model_prefers_elastic_restore():
+    from repro.core.sched.faults import pareto_frontier, priced_fault_model
+    cfg = opt_config("opt-125m")
+    pl = _placement(cfg, _two_region_fleet())
+    fm = priced_fault_model(cfg, pl, lambda_per_device_hour=0.5,
+                            step_time_s=30.0, stage_recompute_s=600.0,
+                            replication=1)
+    assert 0 < fm.elastic_restore_s < fm.ckpt_restore_s
+    # elastic checkpointing dominates plain checkpointing at equal
+    # intervals (same write cost, strictly cheaper restores)
+    from repro.core.sched.faults import checkpoint_outcome
+    plain = checkpoint_outcome(fm, 50)
+    elastic = checkpoint_outcome(fm, 50, elastic=True)
+    assert elastic.slowdown < plain.slowdown
+    names = " ".join(s.name for s in pareto_frontier(fm))
+    assert "checkpoint@" not in names.replace("elastic-ckpt@", "")
+
+
+# --------------------------------------------------------------- training
+def test_trainer_checkpoints_via_placement_and_resumes(tmp_path):
+    from repro.train.trainer import TrainerConfig, train
+    cfg = _cfg()
+    pl_cfg = CheckpointSpec(L, (0, 2, 4, L), replication=1)
+    tc = TrainerConfig(steps=4, batch=2, seq_len=16, log_every=0,
+                       checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                       checkpoint_placement=pl_cfg,
+                       checkpoint_replication=1, seed=3)
+    train(cfg, tc)
+    assert ckpt.latest_complete_step(str(tmp_path)) == 4
+    # the checkpoint really is layer-sliced (3 shard manifests)
+    step_dir = tmp_path / "step_00000004"
+    assert len(list(step_dir.glob("manifest_*.json"))) == 3
+    saved = ckpt.restore(str(tmp_path),
+                         _state(cfg), step=4)
+    # resume continues the step numbering and starts from the saved state
+    tc2 = TrainerConfig(steps=2, batch=2, seq_len=16, log_every=0,
+                        checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                        resume=True, seed=3)
+    res = train(cfg, tc2)
+    assert res.resumed_from_step == 4
+    assert ckpt.latest_complete_step(str(tmp_path)) == 6
+    # the resumed run's optimizer picked up where the saved state stopped
+    resumed = ckpt.restore(str(tmp_path), _state(cfg), step=6)
+    assert int(resumed["opt"]["step"]) == int(saved["opt"]["step"]) + 2
+
+
+def test_local_sgd_persists_outer_state_and_resumes(tmp_path):
+    from repro.train.local_sgd import LocalSGDConfig, train_local_sgd
+    from repro.train.trainer import TrainerConfig
+    cfg = _cfg()
+    tc = TrainerConfig(steps=4, batch=2, seq_len=16, log_every=0, seed=1)
+    ls = LocalSGDConfig(replicas=2, inner_steps=2, checkpoint_dir=str(
+        tmp_path), checkpoint_every_rounds=1, resume=False)
+    train_local_sgd(cfg, tc, ls)
+    assert ckpt.latest_complete_step(str(tmp_path)) == 2
+    params = P.init_params(cfg, jax.random.PRNGKey(1))
+    momentum = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+    state = ckpt.restore(str(tmp_path),
+                         {"params": params, "outer_m": momentum})
+    # outer momentum was actually persisted (non-zero after 2 rounds)
+    m_norm = sum(float(jnp.sum(jnp.abs(x)))
+                 for x in jax.tree.leaves(state["outer_m"]))
+    assert m_norm > 0
+    ls2 = LocalSGDConfig(replicas=2, inner_steps=2,
+                         checkpoint_dir=str(tmp_path),
+                         checkpoint_every_rounds=1, resume=True)
+    res = train_local_sgd(cfg, tc, ls2)
+    assert res.resumed_from_round == 2
+    assert ckpt.latest_complete_step(str(tmp_path)) == 4
+    # with a placement, the outer state shards over the spec's stage
+    # slots (one manifest per stage, replication per config)
+    pl = _placement(cfg, _two_region_fleet(), dp=2)
+    ls3 = LocalSGDConfig(replicas=2, inner_steps=2,
+                         checkpoint_dir=str(tmp_path / "pl"),
+                         checkpoint_every_rounds=2,
+                         checkpoint_replication=1)
+    train_local_sgd(cfg, tc, ls3, placement=pl)
+    step_dir = tmp_path / "pl" / "step_00000002"
+    assert len(list(step_dir.glob("manifest_*.json"))) == pl.num_stages
