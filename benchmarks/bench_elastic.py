@@ -25,12 +25,11 @@ Writes ``BENCH_elastic.json`` — the artifact CI uploads.
 from __future__ import annotations
 
 import argparse
-import json
 import tempfile
 from pathlib import Path
 from typing import Dict, List
 
-from benchmarks.common import BenchResult, Claim, print_result
+from benchmarks.common import BenchResult, Claim, print_result, write_bench_json
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_elastic.json"
 
@@ -223,9 +222,9 @@ def run(smoke: bool = False, out: Path = OUT) -> BenchResult:
         f"{head['meta']['state_GB']:.2f} GB; survivors keep shards local, "
         f"joiners fetch layer ranges from the nearest holder")
 
-    out.write_text(json.dumps({"record": record,
-                               "claims": [c.__dict__ for c in res.claims]},
-                              indent=1))
+    write_bench_json(str(out),
+                     {"record": record,
+                      "claims": [c.__dict__ for c in res.claims]})
     res.notes.append(f"wrote {out.name}")
     return res
 

@@ -18,11 +18,10 @@ artifact CI uploads.
 from __future__ import annotations
 
 import argparse
-import json
 from pathlib import Path
 from typing import Dict, List
 
-from benchmarks.common import BenchResult, Claim, print_result
+from benchmarks.common import BenchResult, Claim, print_result, write_bench_json
 from repro.configs import get_config
 from repro.core.energy.devices import LAPTOP_M2PRO, SMARTPHONE_SD888
 from repro.core.net import NetParams, Topology
@@ -126,9 +125,9 @@ def run(smoke: bool = False, out: Path = OUT) -> BenchResult:
         f"activation WAN, K=16 flips to region-contiguous pipelines — "
         f"the cost model, not a heuristic, picks the crossing to pay")
 
-    out.write_text(json.dumps({"record": record,
-                               "claims": [c.__dict__ for c in res.claims]},
-                              indent=1))
+    write_bench_json(str(out),
+                     {"record": record,
+                      "claims": [c.__dict__ for c in res.claims]})
     res.notes.append(f"wrote {out.name}")
     return res
 

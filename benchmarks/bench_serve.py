@@ -23,7 +23,6 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import json
 import platform
 import time
 from typing import Any, Dict, List
@@ -32,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BenchResult, Claim
+from benchmarks.common import BenchResult, Claim, write_bench_json
 
 FP32_TOL = 5e-5
 
@@ -165,8 +164,7 @@ def bench(n_requests: int, max_prompt: int, max_new: int, slots: int
 def run(n_requests: int = 12, max_prompt: int = 20, max_new: int = 24,
         slots: int = 4, out_path: str = "BENCH_serve.json") -> BenchResult:
     data = bench(n_requests, max_prompt, max_new, slots)
-    with open(out_path, "w") as f:
-        json.dump(data, f, indent=2, sort_keys=True)
+    write_bench_json(out_path, data)
 
     res = BenchResult(name="bench_serve")
     res.rows.append({"variant": "sequential_greedy",

@@ -6,8 +6,51 @@ orchestrates them and fails the process if any paper claim is violated.
 
 from __future__ import annotations
 
+import json
+import os
+import platform
+import subprocess
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
+
+
+def bench_meta() -> Dict[str, Any]:
+    """Provenance stamp for every BENCH_*.json: git commit, UTC
+    timestamp, jax version, backend, platform — what makes the bench
+    trajectory comparable across PRs."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        commit = "unknown"
+    import jax
+    return {
+        "commit": commit,
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                       time.gmtime()),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+    }
+
+
+def write_bench_json(path: str, data: Dict[str, Any],
+                     registry=None) -> None:
+    """Write a bench artifact with the uniform schema: the module's own
+    payload + ``meta`` (provenance, see :func:`bench_meta`) + optional
+    ``metrics`` (a ``repro.obs`` MetricsRegistry snapshot — histogram
+    summaries with p50/p95/p99)."""
+    payload = dict(data)
+    payload["meta"] = bench_meta()
+    if registry is not None:
+        payload["metrics"] = registry.snapshot()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
 
 
 @dataclass

@@ -52,6 +52,9 @@ class CarbonLedger:
         ci = self.intensity_kg_per_kwh if intensity is None else intensity
         e = CarbonEntry(label, operational_kg=kwh * pue * ci)
         self.entries.append(e)
+        # gCO2e rides the enclosing span (if any) onto the timeline
+        from repro.obs.trace import get_tracer
+        get_tracer().annotate(carbon_g=e.operational_kg * 1000.0)
         return e
 
     def add_operational_wh(self, label: str, wh: float,

@@ -19,6 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.obs.trace import get_tracer
+
 # §5: WAN transmission ~0.001 kWh/GB; "local computation >= 0.02 kWh/GB"
 # (the paper's per-GB *processing* figure, used for comm-vs-compute
 # trade-offs, NOT a memory-access energy).  Memory access itself is
@@ -56,33 +58,51 @@ class EnergyMonitor:
     scale: float = 1.0                 # calibration factor
     samples: List[StepSample] = field(default_factory=list)
     estimates_j: List[float] = field(default_factory=list)
+    # unscaled per-step estimates: ``estimates_j[i] == raw_j[i] * scale``
+    # holds at all times (calibrate rescales every entry), so totals and
+    # breakdowns never mix pre-/post-calibration scales
+    raw_j: List[float] = field(default_factory=list)
 
     def record_step(self, *, flops: float, hbm_bytes: float = 0.0,
                     net_bytes: float = 0.0, duration_s: float = 0.0
                     ) -> float:
         """Returns the (calibrated) energy estimate for this step, J."""
         m = self.model
-        e = (flops * m.compute_j_per_flop
-             + hbm_bytes * m.hbm_j_per_byte
-             + net_bytes * m.net_j_per_byte
-             + duration_s * m.static_w)
-        e *= self.scale
+        raw = (flops * m.compute_j_per_flop
+               + hbm_bytes * m.hbm_j_per_byte
+               + net_bytes * m.net_j_per_byte
+               + duration_s * m.static_w)
+        e = raw * self.scale
         self.samples.append(StepSample(flops, hbm_bytes, net_bytes,
                                        duration_s))
+        self.raw_j.append(raw)
         self.estimates_j.append(e)
+        # attach the attribution to whatever phase span is open (trainer
+        # step, engine step, sync round) — J lands on the timeline
+        get_tracer().annotate(energy_j=e)
         return e
 
     def calibrate(self, measured_j: float, window: int = 0) -> float:
-        """Align the model to a coarse measurement over the last ``window``
-        steps (0 = all).  Returns the new scale factor."""
-        est = self.estimates_j[-window:] if window else self.estimates_j
-        if not est or sum(est) == 0:
+        """Align the model to a coarse measurement (battery/wall meter)
+        over the last ``window`` steps (0 = all), then rescale EVERY
+        recorded estimate to the new scale so ``total_j`` /
+        ``breakdown_j`` stay on one consistent scale.  The new scale
+        divides the window's *unscaled* raw estimates (each entry's raw
+        is its estimate divided by the scale in effect when it was
+        recorded), so repeated calibrations don't compound.  Returns the
+        new scale factor."""
+        raw = self.raw_j[-window:] if window else self.raw_j
+        if not raw or sum(raw) == 0:
             return self.scale
-        raw = sum(est) / self.scale
-        self.scale = measured_j / raw
-        self.estimates_j = [e / (sum(est) / measured_j) for e in est] \
-            if window == 0 else self.estimates_j
+        self.scale = measured_j / sum(raw)
+        self.estimates_j = [r * self.scale for r in self.raw_j]
         return self.scale
+
+    def reset(self) -> None:
+        """Drop recorded samples/estimates; calibration scale persists."""
+        self.samples.clear()
+        self.estimates_j.clear()
+        self.raw_j.clear()
 
     @property
     def total_j(self) -> float:

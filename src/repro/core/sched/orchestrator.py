@@ -30,6 +30,7 @@ from repro.core.carbon.intensity import IntensityTrace
 from repro.core.net import Topology
 from repro.core.placement import search_placement
 from repro.core.planner import dtfm
+from repro.obs.trace import get_tracer
 from repro.core.sched.carbon_aware import FleetDevice, carbon_rate
 from repro.core.sched.thermal import ThermalState
 from repro.models.config import ModelConfig
@@ -141,6 +142,11 @@ class Orchestrator:
     # ------------------------------------------------------------------ run
     def run(self) -> SimResult:
         sim, cfg = self.sim, self.cfg
+        # fleet events land on the tracer with EXPLICIT simulated-clock
+        # timestamps (seconds from run start) on the "fleet" track —
+        # churn, replans, restores and checkpoint writes share one
+        # Perfetto timeline with their byte/energy attributions
+        tr = get_tracer()
         t = 0.0
         steps = 0
         rework = 0
@@ -216,6 +222,11 @@ class Orchestrator:
                                        layer_bytes=layer_b,
                                        global_bytes=global_b,
                                        naive=sim.naive_restore)
+                    tr.complete("restore", ts_s=t, dur_s=rc.time_s,
+                                cat="sched", track="fleet",
+                                bytes_moved=rc.bytes_moved,
+                                wan_bytes=rc.wan_bytes,
+                                energy_wh=rc.energy_wh, step=steps)
                     t += rc.time_s
                     restores += 1
                     restore_s_total += rc.time_s
@@ -236,6 +247,9 @@ class Orchestrator:
                     batch=sim.batch, seq_len=sim.seq_len,
                     microbatches=sim.microbatches, collective="ring")
                 last_strategy = placement.strategy
+                tr.instant("replan", "sched", track="fleet", ts_s=t,
+                           step=steps, strategy=placement.strategy,
+                           active=len(self.active))
             # scale COMPUTE time by the thermal derate of the slowest
             # member; comm time is not derated (the radio, not the SoC,
             # is the bottleneck)
@@ -274,6 +288,10 @@ class Orchestrator:
                 ck_spec = CheckpointSpec.from_placement(
                     placement, sim.ckpt_replication)
                 wc = write_cost(topo, placement, ck_spec, layer_b, global_b)
+                tr.complete("ckpt_write", ts_s=t, dur_s=wc.time_s,
+                            cat="sched", track="fleet", step=steps,
+                            bytes_moved=wc.bytes_moved,
+                            energy_wh=wc.energy_wh)
                 t += wc.time_s
                 ckpt_writes += 1
                 ckpt_write_s_total += wc.time_s
@@ -296,6 +314,12 @@ class Orchestrator:
                 changes_now += 1
             changes += changes_now
             members_now = {d.device_id for d in self.active}
+            if changes_now:
+                tr.instant("churn", "sched", track="fleet", ts_s=t,
+                           step=steps, changes=changes_now,
+                           joined=sorted(members_now - members_before),
+                           left=sorted(members_before - members_now),
+                           active=len(self.active))
             if members_before - members_now:
                 # a member LEFT (joins don't lose state): recompute the
                 # lost steps — charged as extra wall time and energy,
@@ -307,6 +331,9 @@ class Orchestrator:
                 lost = min(steps - last_ckpt_step,
                            sim.checkpoint_interval) // 2
                 rework += lost
+                tr.complete("rework", ts_s=t, dur_s=lost * step_s,
+                            cat="sched", track="fleet", step=steps,
+                            lost_steps=lost)
                 t += lost * step_s
                 energy_wh += lost * e_wh
                 comm_s_total += lost * plan.comm_s_per_step
@@ -321,6 +348,12 @@ class Orchestrator:
                 topo = self._rebuild_topology()
                 plan = None
 
+            if tr.enabled:
+                tr.complete("step", ts_s=t, dur_s=step_s, cat="sched",
+                            track="fleet/steps", step=steps,
+                            active=len(self.active),
+                            derate=round(derate, 4), energy_wh=e_wh)
+                tr.counter("fleet.active", len(self.active), ts_s=t)
             t += step_s
             steps += 1
             active_sum += len(self.active)

@@ -33,6 +33,14 @@ def main() -> None:
                          "flash-decode kernel (interpret mode off-TPU)")
     ap.add_argument("--legacy", action="store_true",
                     help="force the dense greedy_generate path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto JSON timeline "
+                         "(per-request queued/prefill/decode lifecycle "
+                         "spans + engine steps + KV counters)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine metrics registry as JSONL "
+                         "(TTFT p50/p99, per-request tokens/s, KV "
+                         "utilization histograms)")
     args = ap.parse_args()
 
     if args.host_devices:
@@ -52,10 +60,21 @@ def main() -> None:
           f"(energy profile: {device.name})")
     params = P.init_params(cfg, jax.random.PRNGKey(0))
 
+    if args.trace_out or args.metrics_out:
+        from repro.obs import Tracer, set_tracer
+        set_tracer(Tracer(enabled=True, process=f"serve:{cfg.name}"))
+
     if not args.legacy and M.paged_decode_supported(cfg):
         _run_engine(args, cfg, params, device)
     else:
         _run_legacy(args, cfg, params, device)
+
+    if args.trace_out:
+        from repro.obs import get_tracer
+        get_tracer().save_chrome_trace(args.trace_out)
+        print(f"[serve] trace: {args.trace_out} "
+              f"({len(get_tracer().events)} events — open in "
+              "https://ui.perfetto.dev)")
 
 
 def _mixed_requests(args, cfg, tag: str):
@@ -92,6 +111,18 @@ def _run_engine(args, cfg, params, device) -> None:
     print(f"[serve] engine: {int(s['tokens_generated'])} tokens in "
           f"{engine.wall_s:.2f}s ({s['tokens_per_s']:.1f} tok/s, "
           f"{int(s['steps'])} steps, {ecfg.max_slots} slots)")
+    if "ttft_p50_s" in s:
+        print(f"[serve] TTFT p50 {s['ttft_p50_s']*1e3:.1f} ms / "
+              f"p99 {s['ttft_p99_s']*1e3:.1f} ms")
+    if args.metrics_out:
+        import jax
+        engine.metrics.dump_jsonl(
+            args.metrics_out,
+            meta={"arch": cfg.name, "requests": args.batch,
+                  "max_new": args.max_new, "attn_impl": args.attn_impl,
+                  "backend": jax.default_backend()})
+        print(f"[serve] metrics: {args.metrics_out} "
+              f"({len(engine.metrics.names())} metrics)")
     print(f"[serve] paged KV: peak {s['peak_cache_bytes']/1e6:.2f} MB of "
           f"{s['pool_bytes']/1e6:.2f} MB pool "
           f"(peak frag {s['frag_tokens_peak']:.0f} tokens, "
@@ -125,9 +156,13 @@ def _run_legacy(args, cfg, params, device) -> None:
                     cache_len=args.prompt_len + args.max_new,
                     enc=enc).block_until_ready()
 
+    from repro.obs import get_tracer
     t0 = time.time()
-    out = greedy_generate(params, cfg, prompt, max_new=args.max_new, enc=enc)
-    out.block_until_ready()
+    with get_tracer().span("greedy_generate", "serve", batch=args.batch,
+                           max_new=args.max_new):
+        out = greedy_generate(params, cfg, prompt, max_new=args.max_new,
+                              enc=enc)
+        out.block_until_ready()
     wall = time.time() - t0
     n_new = args.batch * args.max_new
     dec_flops = sum(
@@ -139,6 +174,14 @@ def _run_legacy(args, cfg, params, device) -> None:
           f"({device.name} roofline: "
           f"{dec_flops/device.peak_flops*1e3:.3f} ms compute-bound)")
     print(f"[serve] sample: {list(map(int, out[0, -10:]))}")
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        reg.counter("serve/tokens").inc(n_new)
+        reg.histogram("serve/tokens_per_s", lo=1e-3, hi=1e6) \
+            .observe(n_new / wall)
+        reg.dump_jsonl(args.metrics_out,
+                       meta={"arch": cfg.name, "path": "legacy"})
 
 
 if __name__ == "__main__":

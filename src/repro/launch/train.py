@@ -4,13 +4,22 @@ Runs the trainer loop for any registered architecture on whatever devices
 exist.  ``--reduced`` (default on CPU) trains the smoke variant;
 ``--mesh data,model`` builds a local mesh from the visible devices so the
 same entrypoint drives a laptop, an edge mesh simulation
-(``--host-devices N``), or a real pod slice.
+(``--host-devices N``), or a real pod slice.  ``--local-sgd`` switches to
+the DiLoCo-style local-update loop (``--replicas`` × ``--inner-steps``).
+
+Telemetry: ``--trace-out trace.json`` captures a Chrome-trace /
+Perfetto timeline of every step phase (data / fwd_bwd_opt / outer-sync /
+checkpoint, with J + gCO2e attached); ``--metrics-out metrics.jsonl``
+writes the metrics registry (per-phase step-time histograms with
+p50/p95/p99, loss/grad-norm distributions, byte counters).  Validate
+either with ``python -m repro.obs.validate <file>``.
 
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
         --steps 100
-    PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
-        --host-devices 8 --mesh 2,4 --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch opt-125m \
+        --local-sgd --replicas 2 --inner-steps 8 --steps 32 \
+        --trace-out trace.json --metrics-out metrics.jsonl
 """
 
 import argparse
@@ -42,6 +51,17 @@ def main() -> None:
                          "onto whatever runs now)")
     ap.add_argument("--device", default="laptop-m2pro",
                     help="energy-model device for the carbon ledger")
+    ap.add_argument("--local-sgd", action="store_true",
+                    help="run the DiLoCo local-update loop instead of "
+                         "the plain trainer")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="local-SGD replica count")
+    ap.add_argument("--inner-steps", type=int, default=8,
+                    help="local-SGD inner steps per sync round (K)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto JSON timeline")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry as JSONL")
     args = ap.parse_args()
 
     if args.host_devices:
@@ -55,11 +75,20 @@ def main() -> None:
     from repro.core.carbon.accounting import CarbonLedger
     from repro.core.energy.devices import get_device
     from repro.core.energy.monitor import ComponentModel, EnergyMonitor
+    from repro.obs import MetricsRegistry, Tracer, set_tracer
     from repro.train.trainer import TrainerConfig, train
 
     cfg = get_config(args.arch if args.full else args.arch + "-smoke")
     print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params on "
           f"{jax.device_count()} device(s)")
+
+    registry = None
+    if args.trace_out or args.metrics_out:
+        # tracing on: span durations feed the registry's histograms, so
+        # --metrics-out alone still gets per-phase step-time summaries
+        registry = MetricsRegistry()
+        set_tracer(Tracer(enabled=True, registry=registry,
+                          process=f"train:{cfg.name}"))
 
     monitor = EnergyMonitor(ComponentModel.for_device(
         get_device(args.device)))
@@ -71,20 +100,48 @@ def main() -> None:
                        checkpoint_every=args.checkpoint_every,
                        resume=args.resume)
 
+    def _run():
+        if args.local_sgd:
+            from repro.train.local_sgd import (LocalSGDConfig,
+                                               train_local_sgd)
+            ls = LocalSGDConfig(replicas=args.replicas,
+                                inner_steps=args.inner_steps,
+                                checkpoint_dir=args.checkpoint_dir,
+                                checkpoint_every_rounds=args.checkpoint_every,
+                                resume=args.resume)
+            return train_local_sgd(cfg, tc, ls, monitor=monitor,
+                                   metrics=registry)
+        return train(cfg, tc, monitor=monitor, metrics=registry)
+
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
         mesh = jax.make_mesh(dims, ("data", "model")[: len(dims)])
         with compat.set_mesh(mesh):
-            res = train(cfg, tc, monitor=monitor)
+            res = _run()
     else:
-        res = train(cfg, tc, monitor=monitor)
+        res = _run()
 
     led = CarbonLedger()
     led.add_operational_wh("train", res.energy_wh)
+    rate = res.steps_per_s
     print(f"[train] final loss {res.final_loss:.4f}  "
-          f"{res.steps_per_s:.2f} steps/s  "
+          f"{rate:.2f} steps/s  "
           f"{res.energy_wh:.3f} Wh modelled  "
           f"{led.operational_kg*1000:.3f} gCO2e")
+
+    if args.trace_out:
+        from repro.obs import get_tracer
+        get_tracer().save_chrome_trace(args.trace_out)
+        print(f"[train] trace: {args.trace_out} "
+              f"({len(get_tracer().events)} events — open in "
+              "https://ui.perfetto.dev)")
+    if args.metrics_out:
+        registry.dump_jsonl(args.metrics_out,
+                            meta={"arch": cfg.name, "steps": args.steps,
+                                  "local_sgd": args.local_sgd,
+                                  "backend": jax.default_backend()})
+        print(f"[train] metrics: {args.metrics_out} "
+              f"({len(registry.names())} metrics)")
 
 
 if __name__ == "__main__":

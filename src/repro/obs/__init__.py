@@ -1,0 +1,23 @@
+"""Unified fleet telemetry: span tracing (Perfetto/Chrome-trace + JSONL
+export), a metrics registry (counters / gauges / fixed-bucket histograms
+with p50/p95/p99), and the device-resident accumulator that keeps
+instrumentation off the dispatch critical path.
+
+Producers across the repo emit onto ONE timeline: trainer + local-SGD
+step phases, the serving engine's per-request lifecycle
+(queued→prefill→decode→finished/preempted), orchestrator fleet events
+(churn / replan / restore / checkpoint on the simulated clock), and
+EnergyMonitor / CarbonLedger attributions (J, gCO2e) attached to
+whatever span encloses them.
+"""
+
+from repro.obs.metrics import (Counter, DeviceAccumulator, Gauge,
+                               Histogram, MetricsRegistry)
+from repro.obs.trace import (NULL_SPAN, Span, Tracer, get_tracer,
+                             set_tracer)
+
+__all__ = [
+    "Counter", "DeviceAccumulator", "Gauge", "Histogram",
+    "MetricsRegistry", "NULL_SPAN", "Span", "Tracer", "get_tracer",
+    "set_tracer",
+]

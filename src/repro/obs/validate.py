@@ -1,0 +1,128 @@
+"""Schema validation for the telemetry artifacts CI uploads.
+
+Usage::
+
+    python -m repro.obs.validate trace.json metrics.jsonl [...]
+
+``.json`` files are validated as Chrome trace-event JSON (the format
+https://ui.perfetto.dev loads): a ``traceEvents`` list whose entries
+carry ``ph``/``ts``/``pid``/``tid``, with ``dur`` on complete (``X``)
+events.  ``.jsonl`` files are validated as either a metrics dump (lines
+of ``{"record": "metric", "name", "type", ...}`` with histogram
+summaries carrying count/sum and percentiles when non-empty) or a raw
+trace event log (lines of ``{name, ph, ts_us, dur_us, track, args}``).
+Exits non-zero, naming the offending line/event, on any violation.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict
+
+_PHASES = {"X", "i", "C", "M", "b", "e", "n"}
+
+
+def validate_chrome_trace(path: str) -> Dict[str, int]:
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or "traceEvents" not in data:
+        raise ValueError(f"{path}: not object-format chrome trace "
+                         "(missing traceEvents)")
+    events = data["traceEvents"]
+    if not isinstance(events, list) or not events:
+        raise ValueError(f"{path}: traceEvents empty or not a list")
+    counts: Dict[str, int] = {}
+    for i, e in enumerate(events):
+        for key in ("ph", "pid", "tid", "name"):
+            if key not in e:
+                raise ValueError(f"{path}: event {i} missing {key!r}: {e}")
+        ph = e["ph"]
+        if ph not in _PHASES:
+            raise ValueError(f"{path}: event {i} unknown ph {ph!r}")
+        if ph != "M":
+            ts = e.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                raise ValueError(f"{path}: event {i} bad ts {ts!r}")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"{path}: event {i} (X) bad dur {dur!r}")
+        counts[ph] = counts.get(ph, 0) + 1
+    if counts.get("X", 0) == 0:
+        raise ValueError(f"{path}: no complete (X) span events")
+    return counts
+
+
+def validate_metrics_jsonl(path: str) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        raise ValueError(f"{path}: empty metrics/event log")
+    for i, ln in enumerate(lines):
+        try:
+            rec = json.loads(ln)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"{path}: line {i + 1} not JSON: {e}")
+        if not isinstance(rec, dict):
+            raise ValueError(f"{path}: line {i + 1} not an object")
+        if rec.get("record") == "meta":
+            counts["meta"] = counts.get("meta", 0) + 1
+        elif rec.get("record") == "metric":
+            for key in ("name", "type"):
+                if key not in rec:
+                    raise ValueError(f"{path}: line {i + 1} missing "
+                                     f"{key!r}: {rec}")
+            if rec["type"] == "histogram":
+                if "count" not in rec or "sum" not in rec:
+                    raise ValueError(f"{path}: line {i + 1} histogram "
+                                     "missing count/sum")
+                if rec["count"] > 0:
+                    for p in ("p50", "p95", "p99"):
+                        if p not in rec:
+                            raise ValueError(f"{path}: line {i + 1} "
+                                             f"non-empty histogram "
+                                             f"missing {p}")
+            elif rec["type"] in ("counter", "gauge"):
+                if "value" not in rec:
+                    raise ValueError(f"{path}: line {i + 1} "
+                                     f"{rec['type']} missing value")
+            else:
+                raise ValueError(f"{path}: line {i + 1} unknown metric "
+                                 f"type {rec['type']!r}")
+            counts["metric"] = counts.get("metric", 0) + 1
+        elif "ph" in rec and "ts_us" in rec:      # raw trace event log
+            counts["event"] = counts.get("event", 0) + 1
+        else:
+            raise ValueError(f"{path}: line {i + 1} unrecognized record: "
+                             f"{rec}")
+    return counts
+
+
+def validate(path: str) -> Dict[str, int]:
+    if path.endswith(".jsonl"):
+        return validate_metrics_jsonl(path)
+    return validate_chrome_trace(path)
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: python -m repro.obs.validate FILE [FILE ...]")
+        return 2
+    rc = 0
+    for p in paths:
+        try:
+            counts = validate(p)
+        except (OSError, ValueError) as e:
+            print(f"[obs.validate] FAIL {e}")
+            rc = 1
+            continue
+        detail = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+        print(f"[obs.validate] OK {p}: {detail}")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

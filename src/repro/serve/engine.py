@@ -37,10 +37,23 @@ from repro.core.energy.devices import TPU_V5E, DeviceSpec
 from repro.core.energy.monitor import ComponentModel, EnergyMonitor
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 from repro.serve.paged_cache import PagedKVCache, blocks_for
 from repro.serve.sampling import SamplingParams, sample_tokens
 
 PyTree = Any
+
+
+@dataclass
+class _ReqTelemetry:
+    """Host-side lifecycle clock for one request: survives preemption and
+    requeue (TTFT is measured submit→first *ever* sampled token; the
+    end-to-end tokens/s denominator is submit→finish)."""
+    submit_s: float
+    first_token_s: float = -1.0
+    phase: Any = None                 # open lifecycle span handle
+    phase_name: str = ""
 
 
 @dataclass(frozen=True)
@@ -90,7 +103,8 @@ class ServeEngine:
 
     def __init__(self, params: PyTree, cfg: ModelConfig, ecfg: EngineConfig,
                  *, device: DeviceSpec = TPU_V5E,
-                 intensity_kg_per_kwh: Optional[float] = None):
+                 intensity_kg_per_kwh: Optional[float] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if not M.paged_decode_supported(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged serving needs attn/mlp/moe-only decoders "
@@ -119,6 +133,12 @@ class ServeEngine:
         self.tokens_generated = 0
         self._frag_tokens_peak = 0.0
         self._util_peak = 0.0
+        # telemetry: lifecycle spans ride the process-global tracer;
+        # histograms (TTFT, per-request tokens/s, per-step KV stats) live
+        # in a per-engine registry so runs don't bleed into each other
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._tracer = get_tracer()
+        self._rt: Dict[str, _ReqTelemetry] = {}
 
         from repro.train.trainer import donation_supported
         donate = (1,) if donation_supported() else ()
@@ -133,6 +153,19 @@ class ServeEngine:
         self.pool_bytes = int(sum(l.size * l.dtype.itemsize for l in leaves))
         self.bytes_per_block = self.pool_bytes / ecfg.num_blocks
 
+    # ----------------------------------------------------------- telemetry
+    def _phase_begin(self, uid: str, name: str, **attrs) -> None:
+        rt = self._rt[uid]
+        rt.phase = self._tracer.begin(name, "serve.request",
+                                      track=f"req:{uid}", uid=uid, **attrs)
+        rt.phase_name = name
+
+    def _phase_end(self, uid: str, state: str, **attrs) -> None:
+        rt = self._rt.get(uid)
+        if rt is not None and rt.phase is not None:
+            rt.phase.end(state=state, **attrs)
+            rt.phase = None
+
     # ------------------------------------------------------------- scheduling
     def submit(self, req: Request) -> None:
         if req.max_new < 1:
@@ -146,6 +179,9 @@ class ServeEngine:
                 f"request {req.uid}: {need} blocks needed, engine limit "
                 f"{limit} — raise num_blocks/max_blocks_per_seq")
         self._orig_prompts[req.uid] = list(req.prompt)
+        self._rt[req.uid] = _ReqTelemetry(submit_s=self._tracer.now_s())
+        self._phase_begin(req.uid, "queued",
+                          prompt_len=len(req.prompt), max_new=req.max_new)
         self._waiting.append(req)
 
     def _admit(self) -> None:
@@ -156,6 +192,8 @@ class ServeEngine:
             slot = free.pop(0)
             self.kv.open_slot(slot)
             self._slots[slot] = _Slot(req)
+            self._phase_end(req.uid, "admitted")
+            self._phase_begin(req.uid, "prefill", slot=slot)
 
     def _preempt_youngest(self) -> bool:
         """Free the least-progressed slot, folding its generated tokens
@@ -175,6 +213,13 @@ class ServeEngine:
         self._waiting.appendleft(merged)
         self._preempt_counts[merged.uid] = \
             self._preempt_counts.get(merged.uid, 0) + 1
+        # lifecycle: whatever phase was running ends preempted; the
+        # request re-queues (its TTFT clock keeps running from submit)
+        self._phase_end(merged.uid, "preempted",
+                        generated=len(s.generated))
+        self._phase_begin(merged.uid, "queued", requeued=True)
+        self._tracer.instant("preempt", "serve", uid=merged.uid)
+        self.metrics.counter("serve/preemptions").inc(1)
         return True
 
     def _ensure_capacity(self) -> None:
@@ -190,6 +235,11 @@ class ServeEngine:
     # ------------------------------------------------------------------ step
     def step(self) -> int:
         """Run one engine iteration; returns tokens committed this step."""
+        with self._tracer.span("engine_step", "serve", track="engine",
+                               metric="serve/step_s") as sp:
+            return self._step_inner(sp)
+
+    def _step_inner(self, sp) -> int:
         self._admit()
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
@@ -198,6 +248,7 @@ class ServeEngine:
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return 0
+        sp.set(active=len(active))
 
         t0 = time.perf_counter()
         n = self.ecfg.max_slots
@@ -228,6 +279,18 @@ class ServeEngine:
             flops += F.decode_flops(self.cfg, 1, cache_len)
             hbm += F.kv_cache_bytes(self.cfg, 1, cache_len)
             s.fed += 1
+            if s.fed == len(s.req.prompt):
+                # first sampled token for this (possibly merged) prompt:
+                # prefill is over, the decode phase starts now
+                self._phase_end(s.req.uid, "prefilled")
+                self._phase_begin(s.req.uid, "decode", slot=i)
+                rt = self._rt.get(s.req.uid)
+                if rt is not None and rt.first_token_s < 0:
+                    rt.first_token_s = self._tracer.now_s()
+                    # TTFT survives preemption/requeue: the clock starts
+                    # at submit and only the FIRST ever token stops it
+                    self.metrics.histogram("serve/ttft_s").observe(
+                        rt.first_token_s - rt.submit_s)
             if s.fed >= len(s.req.prompt):          # this logit row counts
                 tok = int(sampled[i])
                 s.generated.append(tok)
@@ -242,11 +305,22 @@ class ServeEngine:
         self.monitor.record_step(flops=flops, hbm_bytes=hbm,
                                  duration_s=time.perf_counter() - t0)
         # fragmentation is only meaningful while sequences are live, so
-        # sample it per step (stats() runs after everything is evicted)
+        # sample it per step (stats() runs after everything is evicted);
+        # the registry keeps the high-water marks so post-run peak stats
+        # never read zero just because every slot was evicted
         st = self.kv.stats()
         self._frag_tokens_peak = max(self._frag_tokens_peak,
                                      st["frag_tokens"])
         self._util_peak = max(self._util_peak, st["utilization"])
+        self.metrics.gauge("serve/kv_utilization_peak").set_max(
+            st["utilization"])
+        self.metrics.gauge("serve/kv_frag_tokens_peak").set_max(
+            st["frag_tokens"])
+        self.metrics.histogram("serve/kv_utilization",
+                               lo=1e-4, hi=2.0).observe(st["utilization"])
+        self.metrics.counter("serve/tokens").inc(committed)
+        self._tracer.counter("kv.utilization", st["utilization"])
+        self._tracer.counter("kv.frag_tokens", st["frag_tokens"])
         self.steps += 1
         return committed
 
@@ -257,9 +331,21 @@ class ServeEngine:
         # everything generated beyond it
         orig = self._orig_prompts[s.req.uid]
         full = list(s.req.prompt) + list(s.generated)
+        n_gen = len(full) - len(orig)
         self.completions[s.req.uid] = Completion(
             uid=s.req.uid, prompt=orig, tokens=full[len(orig):],
             preemptions=self._preempt_counts.get(s.req.uid, 0))
+        self._phase_end(s.req.uid, "finished", tokens=n_gen)
+        rt = self._rt.get(s.req.uid)
+        if rt is not None:
+            # end-to-end rate: completion tokens over submit→finish wall,
+            # so preemption + recompute show up as a lower rate, not a
+            # reset clock
+            dt = self._tracer.now_s() - rt.submit_s
+            if dt > 0 and n_gen > 0:
+                self.metrics.histogram("serve/tokens_per_s",
+                                       lo=1e-3, hi=1e6).observe(n_gen / dt)
+        self.metrics.counter("serve/requests_finished").inc(1)
         self.kv.close_slot(slot)
         self._slots[slot] = None
 
@@ -273,13 +359,15 @@ class ServeEngine:
         completions, counters, the energy monitor, and the allocator /
         fragmentation peaks — but not live sequences or the cache."""
         self.completions.clear()
-        self.monitor.samples.clear()
-        self.monitor.estimates_j.clear()
+        self.monitor.reset()
         self.steps = 0
         self.tokens_generated = 0
         self.wall_s = 0.0
         self._frag_tokens_peak = 0.0
         self._util_peak = 0.0
+        self.metrics = MetricsRegistry()    # fresh histogram window
+        self._rt = {uid: rt for uid, rt in self._rt.items()
+                    if rt.phase is not None}    # keep live lifecycles
         self.kv.allocator.peak_blocks_in_use = self.kv.allocator.blocks_in_use
 
     # ------------------------------------------------------------------- run
@@ -309,12 +397,23 @@ class ServeEngine:
             "pool_bytes": float(self.pool_bytes),
             "peak_cache_bytes": (self.kv.allocator.peak_blocks_in_use
                                  * self.bytes_per_block),
-            # per-step peaks: the instantaneous kv.stats() go to zero once
-            # every sequence is evicted at the end of a run
-            "frag_tokens_peak": self._frag_tokens_peak,
-            "utilization_peak": self._util_peak,
+            # per-step peaks from the metrics registry: the instantaneous
+            # kv.stats() go to zero once every sequence is evicted at the
+            # end of a run, the high-water gauges don't
+            "frag_tokens_peak": self.metrics.gauge(
+                "serve/kv_frag_tokens_peak").value,
+            "utilization_peak": self.metrics.gauge(
+                "serve/kv_utilization_peak").value,
             **self.kv.stats(),
         }
+        ttft = self.metrics.histogram("serve/ttft_s")
+        if ttft.count:
+            out["ttft_p50_s"] = ttft.percentile(50)
+            out["ttft_p99_s"] = ttft.percentile(99)
+        rate = self.metrics.histogram("serve/tokens_per_s",
+                                      lo=1e-3, hi=1e6)
+        if rate.count:
+            out["req_tokens_per_s_p50"] = rate.percentile(50)
         kwh = self.monitor.total_wh / 1000.0
         self.ledger.entries.clear()
         self.ledger.add_operational_kwh("serve", kwh)

@@ -49,6 +49,8 @@ import jax.numpy as jnp
 from repro.core import flops as F
 from repro.core.energy.monitor import EnergyMonitor
 from repro.data.pipeline import make_batch_fn
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 from repro.models import params as PM
 from repro.models.config import ModelConfig
 from repro.optim import adamw
@@ -114,7 +116,8 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                     opt_cfg: Optional[adamw.OptConfig] = None, *,
                     topology=None, placement=None,
                     sync_algorithm: str = "hierarchical",
-                    monitor: Optional[EnergyMonitor] = None
+                    monitor: Optional[EnergyMonitor] = None,
+                    metrics: Optional[MetricsRegistry] = None
                     ) -> LocalSGDResult:
     """Run ``max(1, tc.steps // K)`` whole sync rounds of K inner steps
     per replica (``tc.steps`` rounded down to whole rounds; at least
@@ -190,13 +193,24 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                                remat=tc.remat != "none")
     res = LocalSGDResult()
     rounds = max(1, tc.steps // ls.inner_steps)
+    tr = get_tracer()
+    # per-replica pseudo-gradient wire bytes (constant across rounds:
+    # the compressed-delta layout depends only on the param tree)
+    wire_b = wire_bytes(global_params,
+                        ls.compress or CompressConfig(method="none"))
     t0 = time.time()
     t_prev = t0
     for rnd in range(rounds):
+        round_span = tr.span("round", "local_sgd",
+                             metric="local_sgd/round_s",
+                             round=start_round + rnd)
+        round_span.__enter__()
         round_loss_dev = jnp.float32(0.0)    # accumulated on device
         r0_losses: List[jax.Array] = []      # replica-0 device scalars
         deltas: Optional[PyTree] = None
         for r in range(R):
+            rep_span = tr.span("replica", "local_sgd", replica=r)
+            rep_span.__enter__()
             # with donation the jit consumes its input buffers; every
             # replica therefore starts from a fresh on-device copy so the
             # shared global_params stay valid for the pseudo-gradient
@@ -204,55 +218,82 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                 else locals_[r]
             s = opt_states[r]
             for k in range(ls.inner_steps):
-                batch = jax.device_put(next(streams[r]))
-                p, s, metrics = step_fn(p, s, batch)
+                with tr.span("inner_step", "local_sgd",
+                             metric="local_sgd/inner_step_s"):
+                    batch = jax.device_put(next(streams[r]))
+                    p, s, metrics_d = step_fn(p, s, batch)
                 if r == 0:
-                    r0_losses.append(metrics["loss"])
+                    r0_losses.append(metrics_d["loss"])
                 if monitor is not None:
                     # energy accounting needs true per-step wall-clock,
                     # which only exists at a sync point
-                    jax.block_until_ready(metrics["loss"])
+                    jax.block_until_ready(metrics_d["loss"])
                     t_now = time.time()
                     monitor.record_step(flops=step_flops,
                                         duration_s=t_now - t_prev)
                     t_prev = t_now
-            round_loss_dev = round_loss_dev + metrics["loss"]
+            round_loss_dev = round_loss_dev + metrics_d["loss"]
             locals_[r], opt_states[r] = p, s
 
-            delta = jax.tree.map(
-                lambda g, l: g.astype(jnp.float32) - l.astype(jnp.float32),
-                global_params, p)
-            if ls.compress is not None and ls.compress.method != "none":
-                delta, errors[r] = compress_grads(delta, errors[r],
-                                                  ls.compress)
-            deltas = delta if deltas is None else jax.tree.map(
-                lambda a, b: a + b, deltas, delta)
+            with tr.span("pseudograd", "local_sgd", replica=r,
+                         wire_bytes=wire_b):
+                delta = jax.tree.map(
+                    lambda g, l: g.astype(jnp.float32)
+                    - l.astype(jnp.float32),
+                    global_params, p)
+                if ls.compress is not None and ls.compress.method != "none":
+                    delta, errors[r] = compress_grads(delta, errors[r],
+                                                      ls.compress)
+                deltas = delta if deltas is None else jax.tree.map(
+                    lambda a, b: a + b, deltas, delta)
+            rep_span.__exit__(None, None, None)
 
-        mean_delta = jax.tree.map(lambda d: d / R, deltas)
-        global_params, momentum = outer_fn(global_params, mean_delta,
-                                           momentum)
+        with tr.span("outer_sync", "local_sgd",
+                     metric="local_sgd/outer_sync_s",
+                     wire_bytes_per_replica=wire_b, replicas=R):
+            mean_delta = jax.tree.map(lambda d: d / R, deltas)
+            global_params, momentum = outer_fn(global_params, mean_delta,
+                                               momentum)
+        if metrics is not None:
+            # fleet bytes shipped this round: every replica uploads its
+            # (compressed) pseudo-gradient
+            metrics.counter("local_sgd/pseudograd_bytes").inc(wire_b * R)
+            metrics.counter("local_sgd/rounds").inc(1)
         # every replica restarts the next round from the new global
         # params; inner optimizer state persists (DiLoCo)
         locals_ = [global_params] * R
         if ls.checkpoint_dir and ls.checkpoint_every_rounds \
                 and (rnd + 1) % ls.checkpoint_every_rounds == 0:
             from repro.checkpoint import ckpt
-            state = {"params": global_params, "outer_m": momentum}
-            if placement is not None:
-                # stage slots shard the outer state over the spec's
-                # replica/region groups (each slot's nodes hold its
-                # layer range; replication adds §5 neighbour copies)
-                ckpt.save_for_placement(
-                    ls.checkpoint_dir, start_round + rnd + 1, state,
-                    placement, replication=ls.checkpoint_replication)
-            else:
-                ckpt.save(ls.checkpoint_dir, start_round + rnd + 1, state)
-            ckpt.prune(ls.checkpoint_dir)
+            with tr.span("checkpoint", "local_sgd",
+                         metric="local_sgd/checkpoint_s",
+                         round=start_round + rnd + 1):
+                state = {"params": global_params, "outer_m": momentum}
+                if placement is not None:
+                    # stage slots shard the outer state over the spec's
+                    # replica/region groups (each slot's nodes hold its
+                    # layer range; replication adds §5 neighbour copies)
+                    ckpt.save_for_placement(
+                        ls.checkpoint_dir, start_round + rnd + 1, state,
+                        placement, replication=ls.checkpoint_replication)
+                else:
+                    ckpt.save(ls.checkpoint_dir, start_round + rnd + 1,
+                              state)
+                ckpt.prune(ls.checkpoint_dir)
         # ONE host sync per round: replica-0 per-step losses + fleet mean
-        fetched = jax.device_get({"r0": r0_losses, "round": round_loss_dev})
+        with tr.span("metrics_drain", "local_sgd"):
+            fetched = jax.device_get({"r0": r0_losses,
+                                      "round": round_loss_dev})
         res.losses.extend(float(x) for x in fetched["r0"])
         round_loss = float(fetched["round"])
         res.round_losses.append(round_loss / R)
+        if metrics is not None:
+            for x in fetched["r0"]:
+                metrics.histogram("local_sgd/loss", lo=1e-4, hi=1e4) \
+                    .observe(float(x))
+            metrics.histogram("local_sgd/round_loss", lo=1e-4, hi=1e4) \
+                .observe(round_loss / R)
+        round_span.__exit__(None, None, None)
         if tc.log_every and rnd % max(1, tc.log_every
                                       // ls.inner_steps) == 0:
             print(f"round {rnd:4d}  mean loss {round_loss / R:.4f}")
@@ -262,8 +303,7 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     res.resumed_from_round = start_round
     res.final_loss = res.round_losses[-1]
     res.steps_per_s = rounds * ls.inner_steps * R / wall
-    res.sync_wire_bytes_per_round = wire_bytes(
-        global_params, ls.compress or CompressConfig(method="none"))
+    res.sync_wire_bytes_per_round = wire_b
     if monitor is not None:
         res.energy_wh = monitor.total_wh
     if topology is not None or placement is not None:

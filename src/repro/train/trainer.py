@@ -39,6 +39,8 @@ from repro.checkpoint import ckpt
 from repro.core import flops as F
 from repro.core.energy.monitor import ComponentModel, EnergyMonitor
 from repro.data.pipeline import make_batch_fn
+from repro.obs.metrics import DeviceAccumulator, MetricsRegistry
+from repro.obs.trace import get_tracer
 from repro.models import params as PM
 from repro.models.config import ModelConfig
 from repro.optim import adamw
@@ -105,7 +107,16 @@ def make_jit_train_step(cfg: ModelConfig, tc: TrainerConfig,
 
 def train(cfg: ModelConfig, tc: TrainerConfig,
           opt_cfg: Optional[adamw.OptConfig] = None,
-          monitor: Optional[EnergyMonitor] = None) -> TrainerResult:
+          monitor: Optional[EnergyMonitor] = None,
+          metrics: Optional[MetricsRegistry] = None) -> TrainerResult:
+    """``metrics`` opts into per-phase step-time histograms + loss /
+    grad-norm distributions WITHOUT extra host syncs: device scalars
+    batch in a :class:`DeviceAccumulator` and drain at the same
+    log-window boundaries the async-metrics loop already uses.  Span
+    tracing rides the process-global tracer (``repro.obs``): a disabled
+    tracer (the default) reduces every ``span`` call to one attribute
+    check, keeping the zero-sync loop inside the
+    ``bench_train_step.py`` regression gate."""
     opt_cfg = opt_cfg or adamw.OptConfig(
         learning_rate=3e-4, warmup_steps=max(10, tc.steps // 20),
         decay_steps=tc.steps)
@@ -136,28 +147,50 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
     sync_every_step = (not tc.async_metrics) or monitor is not None
     result = TrainerResult()
     pending: List[Dict[str, jax.Array]] = []   # device-resident metrics
+    tr = get_tracer()
+    acc = DeviceAccumulator(metrics) if metrics is not None else None
 
     batch = jax.device_put(next(data)) if tc.prefetch else None
     t0 = time.time()
     t_prev = t0
     for step in range(tc.steps):
+        step_span = tr.span("step", "train", metric="train/step_s",
+                            step=start_step + step)
+        step_span.__enter__()
         if not tc.prefetch:
-            batch = jax.device_put(next(data))
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
+            with tr.span("data", "train", metric="train/data_s"):
+                batch = jax.device_put(next(data))
+        # forward+backward+optimizer are one fused jit; the span times
+        # host-side dispatch under the async loop and true step time
+        # under the sync loop (monitor present / async_metrics off)
+        with tr.span("fwd_bwd_opt", "train",
+                     metric="train/fwd_bwd_opt_s"):
+            params, opt_state, mx = step_fn(params, opt_state, batch)
         if tc.prefetch and step + 1 < tc.steps:
             # step is dispatched but not complete: stage the next batch now
             # so generation + transfer overlap with device compute
-            batch = jax.device_put(next(data))
+            with tr.span("data", "train", metric="train/data_s"):
+                batch = jax.device_put(next(data))
 
         host: Optional[Dict[str, Any]] = None
         if sync_every_step:
-            host = jax.device_get(metrics)          # one sync per step
+            host = jax.device_get(mx)               # one sync per step
             result.losses.append(float(host["loss"]))
+            if metrics is not None:
+                metrics.histogram("train/loss", lo=1e-4, hi=1e4) \
+                    .observe(float(host["loss"]))
+                metrics.histogram("train/grad_norm", lo=1e-4, hi=1e4) \
+                    .observe(float(host["grad_norm"]))
         else:
-            pending.append(metrics)                 # no sync
+            pending.append(mx)                      # no sync
+            if acc is not None:
+                # device scalars only — drained with ONE device_get at
+                # the log-window boundary below (zero extra syncs)
+                acc.observe("train/loss", mx["loss"])
+                acc.observe("train/grad_norm", mx["grad_norm"])
         if step == 0:
             if host is None:
-                jax.block_until_ready(metrics["loss"])
+                jax.block_until_ready(mx["loss"])
             result.compile_time_s = time.time() - t0
         if monitor is not None:
             t_now = time.time()
@@ -168,7 +201,10 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
             if host is None:
                 # drain the whole window in ONE device_get: bounds the
                 # device-resident metrics backlog at log_every entries
-                fetched = jax.device_get(pending)
+                with tr.span("metrics_drain", "train"):
+                    fetched = jax.device_get(pending)
+                    if acc is not None:
+                        acc.drain()
                 result.losses.extend(float(m["loss"]) for m in fetched)
                 host = fetched[-1]
                 pending.clear()
@@ -177,18 +213,30 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
                   f"lr {float(host['lr']):.2e}")
         if tc.checkpoint_every and tc.checkpoint_dir \
                 and (step + 1) % tc.checkpoint_every == 0:
-            state = {"params": params, "opt": opt_state}
-            if tc.checkpoint_placement is not None:
-                ckpt.save_for_placement(
-                    tc.checkpoint_dir, start_step + step + 1, state,
-                    tc.checkpoint_placement,
-                    replication=tc.checkpoint_replication)
-            else:
-                ckpt.save(tc.checkpoint_dir, start_step + step + 1, state)
-            ckpt.prune(tc.checkpoint_dir)
+            with tr.span("checkpoint", "train",
+                         metric="train/checkpoint_s",
+                         step=start_step + step + 1):
+                state = {"params": params, "opt": opt_state}
+                if tc.checkpoint_placement is not None:
+                    ckpt.save_for_placement(
+                        tc.checkpoint_dir, start_step + step + 1, state,
+                        tc.checkpoint_placement,
+                        replication=tc.checkpoint_replication)
+                else:
+                    ckpt.save(tc.checkpoint_dir, start_step + step + 1,
+                              state)
+                ckpt.prune(tc.checkpoint_dir)
+        step_span.__exit__(None, None, None)
     if pending:
-        fetched = jax.device_get(pending)           # one bulk sync at exit
+        with tr.span("metrics_drain", "train"):
+            fetched = jax.device_get(pending)       # one bulk sync at exit
         result.losses.extend(float(m["loss"]) for m in fetched)
+    if acc is not None:
+        acc.drain()
+    if metrics is not None:
+        metrics.counter("train/steps").inc(tc.steps)
+        metrics.counter("train/tokens").inc(
+            tc.steps * tc.batch * tc.seq_len)
     wall = time.time() - t0
     result.steps_per_s = tc.steps / wall
     if tc.steps > 1 and wall > result.compile_time_s:
