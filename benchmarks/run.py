@@ -14,11 +14,11 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_elastic, bench_placement, bench_serve,
-                        bench_train_step, comm_scaling, compress_ablation,
-                        fig2_scaling, fig3_idealized, fig4_breakdown,
-                        fig5_offload, roofline, sched_carbon,
-                        table1_single_device, table2_dtfm)
+from benchmarks import (bench_elastic, bench_faults, bench_placement,
+                        bench_serve, bench_train_step, comm_scaling,
+                        compress_ablation, fig2_scaling, fig3_idealized,
+                        fig4_breakdown, fig5_offload, roofline,
+                        sched_carbon, table1_single_device, table2_dtfm)
 from benchmarks.common import print_result
 
 MODULES = {
@@ -36,6 +36,7 @@ MODULES = {
     "placement": bench_placement,
     "serve": bench_serve,
     "elastic": bench_elastic,
+    "faults": bench_faults,
 }
 
 

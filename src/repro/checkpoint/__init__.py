@@ -8,9 +8,14 @@ frontier.
 """
 
 from repro.checkpoint import ckpt
-from repro.checkpoint.elastic import (TransferCost, recovery_cost,
-                                      state_layer_bytes, write_cost)
+from repro.checkpoint.ckpt import (HealReport, RestorePolicy,
+                                   ShardChecksumError, ShardReadError)
+from repro.checkpoint.elastic import (TransferCost, heal_cost,
+                                      recovery_cost, state_layer_bytes,
+                                      write_cost)
 from repro.checkpoint.spec import CheckpointSpec
 
-__all__ = ["ckpt", "CheckpointSpec", "TransferCost", "recovery_cost",
-           "state_layer_bytes", "write_cost"]
+__all__ = ["ckpt", "CheckpointSpec", "HealReport", "RestorePolicy",
+           "ShardChecksumError", "ShardReadError", "TransferCost",
+           "heal_cost", "recovery_cost", "state_layer_bytes",
+           "write_cost"]

@@ -25,12 +25,29 @@ any array and raises one :class:`IncompleteCheckpointError` naming every
 missing leaf/shard file; ``prune`` is shard-aware: only steps complete
 across all shards count toward ``keep``, and a newer still-incomplete
 (in-flight) step is never deleted.
+
+**Self-healing** (this file's robustness layer): every data file's CRC32
+lands in the manifest at write time, so silent bit-rot is detectable on
+read, not just absence.  Restores go through a
+:class:`RestorePolicy` — transient I/O errors are retried with
+exponential backoff and every *still*-unreadable shard is named in one
+aggregated :class:`ShardReadError`; with ``sources=`` (neighbour
+``held_shards`` holders, per the spec's §5 replication) a missing or
+corrupt shard is **re-fetched** from the first holder whose copy
+checksums clean — retry + backoff + a per-source wall-clock budget so
+one dead holder cannot stall the heal — and the fetch is priced through
+:func:`repro.checkpoint.elastic.heal_cost`.  A corrupted survivor thus
+degrades to a neighbour (or WAN) fetch instead of a crash.
 """
 
 from __future__ import annotations
 
+import io
 import json
 import shutil
+import time
+import zlib
+from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -47,6 +64,47 @@ LAYOUT_LAYER_SLICED = "layer_sliced"
 
 class IncompleteCheckpointError(FileNotFoundError):
     """A restore/validation found manifest-expected files missing."""
+
+
+class ShardReadError(IncompleteCheckpointError):
+    """Shard files present but unreadable (corrupt or persistent I/O
+    failure) after retries and healing; names every bad shard."""
+
+
+class ShardChecksumError(ValueError):
+    """A shard file's bytes do not match its manifest CRC32."""
+
+
+@dataclass(frozen=True)
+class RestorePolicy:
+    """Retry/heal discipline for shard reads.
+
+    ``retries`` transient-I/O retries per file with exponential backoff
+    starting at ``backoff_s``; checksum mismatches are *not* retried
+    locally (bit-rot is deterministic) — they go to the heal path.  Each
+    heal source gets at most ``source_timeout_s`` of cumulative
+    wall-clock before it is skipped for the remaining files.
+    """
+    retries: int = 2
+    backoff_s: float = 0.05
+    source_timeout_s: float = 5.0
+    verify_checksums: bool = True
+
+
+@dataclass
+class HealReport:
+    """What a self-healing restore actually did."""
+    healed: List[Dict[str, Any]] = field(default_factory=list)
+    # each: {file, reason: missing|corrupt, source, bytes}
+    unrecovered: List[str] = field(default_factory=list)
+    bytes_fetched: int = 0
+    per_source_bytes: Dict[str, int] = field(default_factory=dict)
+    retried_reads: int = 0
+    sources_timed_out: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.unrecovered
 
 
 def _escape(path_str: str) -> str:
@@ -66,17 +124,59 @@ def _flat(tree: PyTree):
     return jax.tree_util.tree_flatten_with_path(tree)[0]
 
 
-def _save_array(path: Path, leaf) -> None:
+def _save_array(path: Path, leaf) -> int:
+    """Write one ``.npy``; returns the CRC32 of the bytes written (the
+    manifest records it so bit-rot is detectable on read)."""
     a = np.asarray(leaf)
     if a.dtype.kind == "V" and a.dtype.itemsize == 2:
         # ml_dtypes.bfloat16 has no numpy cast path: store the bit
         # pattern as uint16 (restore views it back via proto.dtype)
         a = a.view(np.uint16)
-    np.save(path, a)
+    buf = io.BytesIO()
+    np.save(buf, a)
+    data = buf.getvalue()
+    path.write_bytes(data)
+    return zlib.crc32(data)
 
 
-def _load_array(path: Path, proto_dtype) -> np.ndarray:
-    arr = np.load(path)
+def _read_bytes_retry(path: Path, policy: RestorePolicy,
+                      report: Optional[HealReport] = None) -> bytes:
+    """Read raw bytes, retrying transient I/O errors with exponential
+    backoff.  Missing files are not transient — they raise immediately
+    (the caller's completeness/heal machinery owns that case)."""
+    delay = policy.backoff_s
+    for attempt in range(policy.retries + 1):
+        try:
+            return path.read_bytes()
+        except FileNotFoundError:
+            raise
+        except OSError:
+            if attempt == policy.retries:
+                raise
+            if report is not None:
+                report.retried_reads += 1
+            time.sleep(delay)
+            delay *= 2
+
+
+_DEFAULT_POLICY = RestorePolicy()
+
+
+def _load_array(path: Path, proto_dtype, *,
+                crc: Optional[int] = None,
+                policy: RestorePolicy = _DEFAULT_POLICY,
+                report: Optional[HealReport] = None) -> np.ndarray:
+    data = _read_bytes_retry(path, policy, report)
+    if crc is not None and policy.verify_checksums \
+            and zlib.crc32(data) != crc:
+        raise ShardChecksumError(
+            f"{path.name}: CRC32 mismatch against manifest (bit-rot or "
+            "partial write)")
+    try:
+        arr = np.load(io.BytesIO(data), allow_pickle=False)
+    except ValueError as e:
+        raise ShardChecksumError(f"{path.name}: unparseable npy "
+                                 f"({e})") from e
     pd = jax.numpy.dtype(proto_dtype)
     if arr.dtype == np.uint16 and pd.itemsize == 2 and pd.kind == "V":
         arr = arr.view(pd)
@@ -110,14 +210,17 @@ def save(directory: Union[str, Path], step: int, tree: PyTree, *,
     d = _step_dir(directory, step)
     d.mkdir(parents=True, exist_ok=True)
     flat = _flat(tree)
+    checksums: Dict[str, int] = {}
     manifest = {"step": step, "layout": LAYOUT_LEAF_MODULO,
                 "num_leaves": len(flat), "num_shards": num_shards,
                 "shard_id": shard_id,
-                "keys": [jax.tree_util.keystr(p) for p, _ in flat]}
+                "keys": [jax.tree_util.keystr(p) for p, _ in flat],
+                "checksums": checksums}
     for i, (path, leaf) in enumerate(flat):
         if i % num_shards != shard_id:
             continue
-        _save_array(d / _leaf_name(jax.tree_util.keystr(path)), leaf)
+        name = _leaf_name(jax.tree_util.keystr(path))
+        checksums[name] = _save_array(d / name, leaf)
     (d / f"manifest_{shard_id}.json").write_text(json.dumps(manifest))
     return d
 
@@ -143,16 +246,19 @@ def save_sharded(directory: Union[str, Path], step: int, tree: PyTree,
     layer_set = set(layer_keys)
     held = set(spec.held_shards(shard_id))
     slices = spec.slices()
+    checksums: Dict[str, int] = {}
     nonlayer_i = 0
     for key, (_, leaf) in zip(keys, flat):
         if key in layer_set:
             for s in held:
                 a, b = slices[s]
-                _save_array(d / _slice_name(key, a, b),
-                            np.asarray(leaf)[a:b])
+                name = _slice_name(key, a, b)
+                checksums[name] = _save_array(d / name,
+                                              np.asarray(leaf)[a:b])
         else:
             if nonlayer_i % spec.num_shards in held:
-                _save_array(d / _leaf_name(key), leaf)
+                name = _leaf_name(key)
+                checksums[name] = _save_array(d / name, leaf)
             nonlayer_i += 1
     manifest = {"step": step, "layout": LAYOUT_LAYER_SLICED,
                 "num_leaves": len(flat), "num_shards": spec.num_shards,
@@ -161,7 +267,8 @@ def save_sharded(directory: Union[str, Path], step: int, tree: PyTree,
                 "num_layers": spec.num_layers,
                 "boundaries": list(spec.boundaries),
                 "replication": spec.replication,
-                "holders": [list(h) for h in spec.holders]}
+                "holders": [list(h) for h in spec.holders],
+                "checksums": checksums}
     (d / f"manifest_{shard_id}.json").write_text(json.dumps(manifest))
     return d
 
@@ -206,38 +313,49 @@ def _read_manifest(d: Path) -> Dict[str, Any]:
         raise FileNotFoundError(f"no checkpoint manifest under {d}")
     m = json.loads(manifests[0].read_text())
     m.setdefault("layout", LAYOUT_LEAF_MODULO)
+    m.setdefault("checksums", {})
+    # each writer's manifest carries CRCs for only its held files;
+    # verification needs the union (replicated copies share one CRC —
+    # slice files are content-addressed by layer range)
+    for extra in manifests[1:]:
+        try:
+            m["checksums"].update(
+                json.loads(extra.read_text()).get("checksums", {}))
+        except (json.JSONDecodeError, OSError):
+            continue
     m["_manifests_present"] = len(manifests)
     return m
 
 
-def _missing_files(d: Path, m: Dict[str, Any]) -> List[str]:
-    """Manifest-expected data files absent on disk, each named with the
-    leaf and the shard responsible for writing it."""
-    missing: List[str] = []
+def _expected_files(m: Dict[str, Any]) -> List[Tuple[str, str]]:
+    """Every data file the manifest expects: ``(filename, description)``
+    naming the leaf and the shard responsible for writing it."""
+    out: List[Tuple[str, str]] = []
     S = int(m.get("num_shards", 1))
     if m["layout"] == LAYOUT_LEAF_MODULO:
         for i, key in enumerate(m["keys"]):
-            f = d / _leaf_name(key)
-            if not f.exists():
-                missing.append(f"{f.name} (leaf {key}, shard {i % S})")
-        return missing
+            out.append((_leaf_name(key),
+                        f"(leaf {key}, shard {i % S})"))
+        return out
     layer_set = set(m["layer_keys"])
     slices = list(zip(m["boundaries"][:-1], m["boundaries"][1:]))
     nonlayer_i = 0
     for key in m["keys"]:
         if key in layer_set:
             for s, (a, b) in enumerate(slices):
-                f = d / _slice_name(key, a, b)
-                if not f.exists():
-                    missing.append(
-                        f"{f.name} (leaf {key} layers {a}:{b}, shard {s})")
+                out.append((_slice_name(key, a, b),
+                            f"(leaf {key} layers {a}:{b}, shard {s})"))
         else:
-            f = d / _leaf_name(key)
-            if not f.exists():
-                missing.append(f"{f.name} (leaf {key}, shard "
-                               f"{nonlayer_i % S})")
+            out.append((_leaf_name(key),
+                        f"(leaf {key}, shard {nonlayer_i % S})"))
             nonlayer_i += 1
-    return missing
+    return out
+
+
+def _missing_files(d: Path, m: Dict[str, Any]) -> List[str]:
+    """Manifest-expected data files absent on disk."""
+    return [f"{name} {desc}" for name, desc in _expected_files(m)
+            if not (d / name).exists()]
 
 
 def _validate(d: Path) -> Dict[str, Any]:
@@ -298,6 +416,116 @@ def _resolve_step(directory: Union[str, Path], step: Optional[int]) -> Path:
 
 
 # --------------------------------------------------------------------------- #
+# Self-healing: checksum audit + re-fetch from neighbour holders
+# --------------------------------------------------------------------------- #
+
+def _crc_ok(path: Path, crc: Optional[int]) -> bool:
+    if crc is None:
+        return True                   # legacy manifest: existence only
+    try:
+        return zlib.crc32(path.read_bytes()) == crc
+    except OSError:
+        return False
+
+
+def damaged_files(directory: Union[str, Path],
+                  step: Optional[int] = None) -> List[Tuple[str, str]]:
+    """Audit one step: ``(filename, reason)`` for every manifest-expected
+    file that is absent (``missing``) or fails its CRC32 (``corrupt``).
+    Empty list == the step restores clean."""
+    d = _resolve_step(directory, step)
+    m = _read_manifest(d)
+    crcs = m.get("checksums", {})
+    out: List[Tuple[str, str]] = []
+    for name, _ in _expected_files(m):
+        f = d / name
+        if not f.exists():
+            out.append((name, "missing"))
+        elif not _crc_ok(f, crcs.get(name)):
+            out.append((name, "corrupt"))
+    return out
+
+
+def _norm_sources(sources) -> List[Tuple[str, Path]]:
+    """``sources`` entries are directories or ``(holder_name, dir)``
+    pairs; plain directories are labelled by their own path."""
+    out: List[Tuple[str, Path]] = []
+    for s in sources:
+        if isinstance(s, (tuple, list)) and len(s) == 2:
+            out.append((str(s[0]), Path(s[1])))
+        else:
+            out.append((str(s), Path(s)))
+    return out
+
+
+def heal_step(directory: Union[str, Path], step: Optional[int] = None, *,
+              sources: Sequence = (),
+              policy: Optional[RestorePolicy] = None) -> HealReport:
+    """Repair a damaged step in place from neighbour holders.
+
+    Every missing/corrupt file (per :func:`damaged_files`) is re-fetched
+    from the first source whose copy checksums clean against the
+    manifest.  ``sources`` are the §5 ``held_shards`` holders — their
+    local copy of the step directory (or its parent checkpoint dir).
+    Per-source discipline: transient reads retry with backoff; a source
+    whose cumulative wall-clock exceeds ``policy.source_timeout_s`` is
+    skipped for the remaining files (one dead holder must not stall the
+    heal).  Detection and repair land on the obs timeline as
+    ``fault.corrupt`` / ``fault.heal`` instants; the caller prices the
+    fetched bytes through :func:`repro.checkpoint.elastic.heal_cost`.
+    """
+    from repro.obs.trace import get_tracer
+    policy = policy or _DEFAULT_POLICY
+    d = _resolve_step(directory, step)
+    m = _read_manifest(d)
+    crcs = m.get("checksums", {})
+    tr = get_tracer()
+    report = HealReport()
+    damaged = damaged_files(directory, step)
+    if not damaged:
+        return report
+    srcs = _norm_sources(sources)
+    spent: Dict[str, float] = {name: 0.0 for name, _ in srcs}
+    for name, reason in damaged:
+        tr.instant("fault.corrupt", "fault", track="faults",
+                   entity=name, reason=reason, step=d.name)
+        healed = False
+        for holder, sdir in srcs:
+            if spent[holder] > policy.source_timeout_s:
+                if holder not in report.sources_timed_out:
+                    report.sources_timed_out.append(holder)
+                continue
+            t0 = time.monotonic()
+            try:
+                cand = sdir / name
+                if not cand.exists():
+                    cand = sdir / d.name / name
+                data = _read_bytes_retry(cand, policy, report)
+            except OSError:
+                spent[holder] += time.monotonic() - t0
+                continue
+            spent[holder] += time.monotonic() - t0
+            crc = crcs.get(name)
+            if crc is not None and zlib.crc32(data) != crc:
+                continue              # this holder's copy rotted too
+            (d / name).write_bytes(data)
+            report.healed.append({"file": name, "reason": reason,
+                                  "source": holder, "bytes": len(data)})
+            report.bytes_fetched += len(data)
+            report.per_source_bytes[holder] = \
+                report.per_source_bytes.get(holder, 0) + len(data)
+            tr.instant("fault.heal", "fault", track="faults",
+                       entity=name, source=holder, nbytes=len(data),
+                       reason=reason)
+            healed = True
+            break
+        if not healed:
+            report.unrecovered.append(f"{name} ({reason}, no clean "
+                                      "source copy)")
+    return report
+
+
+# --------------------------------------------------------------------------- #
 # Restoring
 # --------------------------------------------------------------------------- #
 
@@ -320,9 +548,12 @@ def _layer_key_set(m: Dict[str, Any]) -> set:
 
 
 def _assemble_leaf(d: Path, m: Dict[str, Any], key: str, proto,
-                   span: Optional[Tuple[int, int]] = None) -> np.ndarray:
+                   span: Optional[Tuple[int, int]] = None,
+                   policy: RestorePolicy = _DEFAULT_POLICY,
+                   report: Optional[HealReport] = None) -> np.ndarray:
     """Load one leaf; layer leaves re-slice across the manifest's
     boundaries, optionally cropped to ``span`` (a new stage's range)."""
+    crcs = m.get("checksums", {})
     if m["layout"] == LAYOUT_LAYER_SLICED and key in _layer_key_set(m):
         lo, hi = span if span is not None else (0, m["num_layers"])
         parts = []
@@ -330,14 +561,49 @@ def _assemble_leaf(d: Path, m: Dict[str, Any], key: str, proto,
             s, e = max(a, lo), min(b, hi)
             if s >= e:
                 continue
-            arr = _load_array(d / _slice_name(key, a, b), proto.dtype)
+            name = _slice_name(key, a, b)
+            arr = _load_array(d / name, proto.dtype,
+                              crc=crcs.get(name), policy=policy,
+                              report=report)
             parts.append(arr[s - a:e - a])
         return np.concatenate(parts, axis=0)
-    return _load_array(d / _leaf_name(key), proto.dtype)
+    name = _leaf_name(key)
+    return _load_array(d / name, proto.dtype, crc=crcs.get(name),
+                       policy=policy, report=report)
+
+
+def _assemble_all(d: Path, m: Dict[str, Any], flat, spans,
+                  policy: RestorePolicy,
+                  report: Optional[HealReport]) -> List[Any]:
+    """Assemble every leaf, aggregating read failures: one
+    :class:`ShardReadError` names every shard that stayed unreadable
+    after the policy's retries (mirrors the up-front
+    :class:`IncompleteCheckpointError` for missing files)."""
+    leaves: List[Any] = []
+    bad: List[str] = []
+    for (path, proto), span in zip(flat, spans):
+        key = jax.tree_util.keystr(path)
+        try:
+            leaves.append(jax.numpy.asarray(
+                _assemble_leaf(d, m, key, proto, span, policy, report),
+                dtype=proto.dtype))
+        except (OSError, ShardChecksumError) as e:
+            bad.append(f"{key}: {e}")
+    if bad:
+        shown = "\n  ".join(bad[:20])
+        more = f"\n  ... and {len(bad) - 20} more" if len(bad) > 20 \
+            else ""
+        raise ShardReadError(
+            f"checkpoint {d}: {len(bad)} shard file(s) unreadable after "
+            f"{policy.retries} retries (pass sources= to re-fetch from "
+            f"neighbour holders):\n  {shown}{more}")
+    return leaves
 
 
 def restore(directory: Union[str, Path], tree_like: PyTree,
-            step: Optional[int] = None) -> PyTree:
+            step: Optional[int] = None, *, sources: Sequence = (),
+            policy: Optional[RestorePolicy] = None,
+            heal_report: Optional[HealReport] = None) -> PyTree:
     """Restore into the structure of ``tree_like`` (dtypes preserved).
 
     Works for both layouts; layer-sliced checkpoints are reassembled
@@ -345,20 +611,35 @@ def restore(directory: Union[str, Path], tree_like: PyTree,
     placement need not match the writing one.  Completeness is validated
     up front: a partial checkpoint raises one
     :class:`IncompleteCheckpointError` naming every missing file.
+
+    Robustness: shard reads are checksum-verified and retried per
+    ``policy``; persistent failures aggregate into one
+    :class:`ShardReadError` naming every unreadable shard.  With
+    ``sources=`` (neighbour holder directories), missing/corrupt shards
+    self-heal first via :func:`heal_step` — pass ``heal_report`` to
+    observe what was fetched from whom.
     """
+    policy = policy or _DEFAULT_POLICY
     d = _resolve_step(directory, step)
+    if sources:
+        rep = heal_step(directory, step, sources=sources, policy=policy)
+        if heal_report is not None:
+            heal_report.__dict__.update(rep.__dict__)
     m = _validate(d)
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     _check_keys(m, [jax.tree_util.keystr(p) for p, _ in flat], d)
-    leaves = [jax.numpy.asarray(
-        _assemble_leaf(d, m, jax.tree_util.keystr(path), proto),
-        dtype=proto.dtype) for path, proto in flat]
+    leaves = _assemble_all(d, m, flat, [None] * len(flat), policy,
+                           heal_report)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def restore_for_placement(directory: Union[str, Path], new_spec,
                           tree_like: PyTree, step: Optional[int] = None,
-                          *, stage: Optional[int] = None) -> PyTree:
+                          *, stage: Optional[int] = None,
+                          sources: Sequence = (),
+                          policy: Optional[RestorePolicy] = None,
+                          heal_report: Optional[HealReport] = None
+                          ) -> PyTree:
     """Restore a checkpoint onto a *different* placement.
 
     ``new_spec`` is the placement (or :class:`CheckpointSpec` /
@@ -369,7 +650,14 @@ def restore_for_placement(directory: Union[str, Path], new_spec,
     leaves come back cropped to the new stage's ``[start, stop)`` range,
     reading only the old slice files that overlap it — the
     bytes-actually-missing read set a joining device fetches.
+
+    Same robustness contract as :func:`restore`: checksum-verified
+    retried reads, one aggregated :class:`ShardReadError`, and
+    ``sources=`` self-healing through :func:`heal_step` — the
+    orchestrator's churn path, so a corrupted survivor degrades to a
+    neighbour/WAN fetch instead of a crash.
     """
+    policy = policy or _DEFAULT_POLICY
     if isinstance(new_spec, CheckpointSpec):
         bounds: List[int] = list(new_spec.boundaries)
     elif hasattr(new_spec, "boundaries"):         # PlacementSpec duck-type
@@ -377,6 +665,10 @@ def restore_for_placement(directory: Union[str, Path], new_spec,
     else:
         bounds = list(new_spec)
     d = _resolve_step(directory, step)
+    if sources:
+        rep = heal_step(directory, step, sources=sources, policy=policy)
+        if heal_report is not None:
+            heal_report.__dict__.update(rep.__dict__)
     m = _validate(d)
     if m["layout"] == LAYOUT_LAYER_SLICED and m["num_layers"] != bounds[-1]:
         raise ValueError(
@@ -386,17 +678,19 @@ def restore_for_placement(directory: Union[str, Path], new_spec,
     _check_keys(m, [jax.tree_util.keystr(p) for p, _ in flat], d)
     span = None if stage is None else (bounds[stage], bounds[stage + 1])
     layer_set = _layer_key_set(m)
+    spans = [span if jax.tree_util.keystr(p) in layer_set else None
+             for p, _ in flat]
+    raw = _assemble_all(d, m, flat, spans, policy, heal_report)
     leaves = []
-    for path, proto in flat:
+    for (path, proto), arr in zip(flat, raw):
         key = jax.tree_util.keystr(path)
-        arr = _assemble_leaf(d, m, key, proto,
-                             span if key in layer_set else None)
         if span is not None and m["layout"] == LAYOUT_LEAF_MODULO \
                 and _is_layer_leaf(key, arr, bounds[-1]):
             # legacy whole-leaf layout: the file holds all layers, so
             # crop after the (unavoidably full) read
-            arr = arr[span[0]:span[1]]
-        leaves.append(jax.numpy.asarray(arr, dtype=proto.dtype))
+            arr = jax.numpy.asarray(np.asarray(arr)[span[0]:span[1]],
+                                    dtype=proto.dtype)
+        leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -134,6 +134,24 @@ def write_cost(topo: Topology, placement, spec: CheckpointSpec,
     return _finalize(cost, busy, topo)
 
 
+def heal_cost(topo: Topology,
+              fetches: List[Tuple[str, str, float]]) -> TransferCost:
+    """Price a self-healing restore's shard re-fetches.
+
+    ``fetches`` is ``(src_holder, dst_node, nbytes)`` per healed file —
+    what :func:`repro.checkpoint.ckpt.heal_step` reports, mapped onto
+    fleet nodes.  Same alpha-beta discipline as write/recovery: fetches
+    into distinct nodes run concurrently, a source may be the backbone
+    ``STORE`` (the WAN-priced last resort when every neighbour copy of a
+    shard rotted).
+    """
+    cost = TransferCost()
+    busy: Dict[str, float] = {}
+    for src, dst, nbytes in fetches:
+        _charge(cost, busy, topo, src, dst, nbytes)
+    return _finalize(cost, busy, topo)
+
+
 def _best_source(topo: Topology, dst: str, holders) -> Optional[str]:
     """Nearest surviving holder of a shard: the destination itself
     (free), else same-region, else any region, else the store."""

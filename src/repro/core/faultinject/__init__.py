@@ -1,0 +1,4 @@
+from repro.core.faultinject.plan import (FaultInjector, FaultPlan,
+                                         corrupt_file)
+
+__all__ = ["FaultPlan", "FaultInjector", "corrupt_file"]

@@ -9,17 +9,31 @@ Simulates a training run over a dynamic edge fleet:
 * fault tolerance by periodic checkpointing (rework on failure),
 * per-step energy/carbon ledger (compute + stall + comm + rework).
 
-Deterministic given the seed (numpy RNG) — the simulator IS the system's
-orchestration logic, exercised by tests and examples, not a visualization
-toy.  Time advances step-by-step; each step reassigns the DT-FM plan if
-membership changed (the paper's "preemptible execution and fast state
-recovery" loop).
+Deterministic given the seed: every stochastic consumer draws from its
+own **named substream** of ``SimConfig.seed`` (join churn, leave churn —
+and fault draws, which are keyed streams inside the
+:class:`~repro.core.faultinject.FaultPlan` itself), so identical configs
+replay identical trajectories and toggling fault injection on cannot
+perturb the churn sequence.  The simulator IS the system's orchestration
+logic, exercised by tests and examples, not a visualization toy.  Time
+advances step-by-step; each step reassigns the DT-FM plan if membership
+changed (the paper's "preemptible execution and fast state recovery"
+loop).
+
+An optional ``SimConfig.fault_plan`` injects deterministic faults on top
+of the Poisson churn: stragglers stretch the step clock, link flaps add
+wide-area jitter, crashes force departures (with the usual rework +
+replan + priced recovery), and checkpoint-shard corruption knocks holder
+copies out of the recovery spec — a corrupted survivor then degrades to
+a neighbour or WAN/store fetch in the recovery pricing instead of
+crashing the run.
 """
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -27,6 +41,7 @@ from repro.checkpoint import (CheckpointSpec, recovery_cost,
                               state_layer_bytes, write_cost)
 from repro.core.carbon.accounting import CarbonLedger
 from repro.core.carbon.intensity import IntensityTrace
+from repro.core.faultinject import FaultInjector, FaultPlan
 from repro.core.net import Topology
 from repro.core.placement import search_placement
 from repro.core.planner import dtfm
@@ -34,6 +49,13 @@ from repro.obs.trace import get_tracer
 from repro.core.sched.carbon_aware import FleetDevice, carbon_rate
 from repro.core.sched.thermal import ThermalState
 from repro.models.config import ModelConfig
+
+
+def _substream(seed: int, name: str) -> np.random.Generator:
+    """Named RNG substream of the sim seed (same keyed-stream idiom as
+    :mod:`repro.core.faultinject`): consumers cannot perturb each other."""
+    return np.random.default_rng([int(seed) & 0xFFFFFFFF,
+                                  zlib.crc32(name.encode())])
 
 
 @dataclass
@@ -52,6 +74,8 @@ class SimConfig:
     carbon_threshold_g_per_gflop: float = float("inf")
     start_hour_utc: float = 9.0
     seed: int = 0
+    fault_plan: Optional[FaultPlan] = None   # deterministic injected
+                                             # faults on top of churn
 
 
 @dataclass
@@ -83,6 +107,10 @@ class SimResult:
     restore_wan_bytes: float = 0.0
     restore_bytes_by_region: Dict[str, float] = field(default_factory=dict)
     recovery_energy_wh: float = 0.0     # radio energy of writes+restores
+    # fault-injection accounting (empty without a fault_plan)
+    fault_counts: Dict[str, int] = field(default_factory=dict)
+    crashes: int = 0
+    corrupted_shard_copies: int = 0
 
 
 class Orchestrator:
@@ -91,7 +119,10 @@ class Orchestrator:
         self.cfg = cfg
         self.fleet = list(fleet)
         self.sim = sim
-        self.rng = np.random.default_rng(sim.seed)
+        # named substreams: join draws never perturb leave draws (and
+        # neither shifts when the keyed-stream fault plan is toggled)
+        self.rng_join = _substream(sim.seed, "join")
+        self.rng_leave = _substream(sim.seed, "leave")
         self.thermals = {d.device_id: ThermalState(d.thermal_params())
                          for d in self.fleet}
         self.active: List[FleetDevice] = []
@@ -99,6 +130,11 @@ class Orchestrator:
         self.traces: Dict[str, IntensityTrace] = {}
         self.topology: Optional[Topology] = None
         self.topology_rebuilds = 0
+        self.injector = FaultInjector(sim.fault_plan) \
+            if sim.fault_plan is not None and sim.fault_plan.active \
+            else None
+        self._offline_until: Dict[int, int] = {}   # device -> rejoin step
+        self._step = 0
 
     def _rebuild_topology(self) -> Topology:
         """Wide-area graph over the current active set; called on every
@@ -115,10 +151,18 @@ class Orchestrator:
         for d in self.fleet:
             rate, _ = carbon_rate(d, hour, self.traces)
             ok = d.charging and rate <= self.sim.carbon_threshold_g_per_gflop
+            if ok and d.device_id in self._offline_until:
+                # crashed device: stays out until its rejoin step
+                ok = self._step >= self._offline_until[d.device_id]
+                if ok:
+                    del self._offline_until[d.device_id]
+                    if self.injector is not None:
+                        self.injector.emit("rejoin", d.device_id,
+                                           ts_s=self._t, step=self._step)
             if ok and d.device_id not in active_ids:
                 # idle candidate joins with prob churn_join per hour
-                if self.rng.random() < self.sim.churn_join_per_hour / 3600.0 \
-                        * self._dt or not self.active:
+                if self.rng_join.random() < self.sim.churn_join_per_hour \
+                        / 3600.0 * self._dt or not self.active:
                     self.active.append(d)
                     changes += 1
             elif not ok and d.device_id in active_ids:
@@ -132,7 +176,21 @@ class Orchestrator:
         stay = []
         changes = 0
         for d in self.active:
-            if self.rng.random() < leave_p and len(self.active) > 1:
+            crashed = self.injector is not None \
+                and self.injector.plan.crashes(d.device_id, self._step)
+            if crashed and len(self.active) > 1:
+                # injected crash: device vanishes mid-step and stays
+                # offline for its plan-drawn rejoin delay; the usual
+                # departure machinery (rework, replan, priced recovery)
+                # handles the fallout
+                wait = self.injector.plan.rejoin_after(d.device_id,
+                                                       self._step)
+                self._offline_until[d.device_id] = self._step + wait
+                self.injector.emit("crash", d.device_id, ts_s=self._t,
+                                   step=self._step, rejoin_steps=wait)
+                changes += 1
+            elif self.rng_leave.random() < leave_p \
+                    and len(self.active) > 1:
                 changes += 1
             else:
                 stay.append(d)
@@ -160,7 +218,14 @@ class Orchestrator:
         iterations = 0
         last_ckpt_step = 0
         self._dt = 1.0
+        self._t = 0.0
+        self._step = 0
         trace: List[Dict] = []
+        inj = self.injector
+        straggle_announced: Set[int] = set()
+        # holder copies knocked out by injected shard corruption; the
+        # next recovery prices around them ((shard, node) pairs)
+        corrupt_copies: Set[Tuple[int, str]] = set()
 
         # elastic state: where shard copies currently sit (live placement
         # nodes; checkpoint writes add §5 neighbour replication), and the
@@ -194,6 +259,7 @@ class Orchestrator:
 
         while steps < sim.total_steps:
             hour = (sim.start_hour_utc + t / 3600.0) % 24.0
+            self._t, self._step = t, steps
             members_before = {d.device_id for d in self.active}
 
             if plan is None:
@@ -217,11 +283,32 @@ class Orchestrator:
                     # from the nearest holder) through the wide-area
                     # model — this replaces the old ckpt_restore_s
                     # constant
+                    rec_spec = state_spec
+                    if corrupt_copies and rec_spec.holders:
+                        # injected bit-rot knocked holder copies out:
+                        # the self-healing restore re-fetches from the
+                        # surviving holders — possibly the WAN/store
+                        # when a shard lost every copy — instead of
+                        # crashing on the corrupt survivor
+                        rec_spec = CheckpointSpec(
+                            rec_spec.num_layers, rec_spec.boundaries,
+                            rec_spec.replication,
+                            tuple(tuple(h for h in hs
+                                        if (i, h) not in corrupt_copies)
+                                  for i, hs in
+                                  enumerate(rec_spec.holders)))
                     rc = recovery_cost(topo, placement,
-                                       old_spec=state_spec,
+                                       old_spec=rec_spec,
                                        layer_bytes=layer_b,
                                        global_bytes=global_b,
                                        naive=sim.naive_restore)
+                    if corrupt_copies:
+                        healed = len({s for s, _ in corrupt_copies})
+                        if inj is not None:
+                            inj.emit("heal", "fleet", ts_s=t,
+                                     step=steps, shards=healed,
+                                     bytes=rc.bytes_moved)
+                        corrupt_copies.clear()
                     tr.complete("restore", ts_s=t, dur_s=rc.time_s,
                                 cat="sched", track="fleet",
                                 bytes_moved=rc.bytes_moved,
@@ -256,7 +343,25 @@ class Orchestrator:
             derate = min(self.thermals[d.device_id].perf_factor()
                          for d in self.active)
             compute_s = plan.step_time_s - plan.comm_s_per_step
-            step_s = compute_s / max(derate, 1e-6) + plan.comm_s_per_step
+            comm_s = plan.comm_s_per_step
+            slow = 1.0
+            if inj is not None:
+                # the synchronous pipeline is gated by its slowest
+                # member: the worst straggler stretches compute, and
+                # each flapped link adds serial jitter to the ring sync
+                for d in self.active:
+                    s_d = inj.plan.slowdown(d.device_id)
+                    if s_d > 1.0 and d.device_id not in straggle_announced:
+                        straggle_announced.add(d.device_id)
+                        inj.emit("straggle", d.device_id, ts_s=t,
+                                 slowdown=round(s_d, 3))
+                    slow = max(slow, s_d)
+                    j = inj.plan.jitter_s(d.device_id, steps)
+                    if j > 0.0:
+                        inj.emit("link_flap", d.device_id, ts_s=t,
+                                 step=steps, jitter_s=round(j, 3))
+                        comm_s += j
+            step_s = compute_s * slow / max(derate, 1e-6) + comm_s
             self._dt = step_s
 
             # advance thermals under load
@@ -303,6 +408,17 @@ class Orchestrator:
                                                intensity=ci)
                 state_spec = ck_spec
                 last_ckpt_step = steps
+                if inj is not None and inj.plan.corrupt_prob > 0:
+                    # silent bit-rot on freshly written holder copies:
+                    # drawn per (step, shard, holder) so the same plan
+                    # rots the same copies every replay
+                    corrupt_copies.clear()
+                    for s_i, hs in enumerate(ck_spec.holders):
+                        for h in hs:
+                            if inj.plan.corrupts(steps, s_i, h):
+                                corrupt_copies.add((s_i, h))
+                                inj.emit("corrupt", h, ts_s=t,
+                                         step=steps, shard=s_i)
 
             # churn
             changes_now = self._depart() + self._admit(hour)
@@ -389,6 +505,10 @@ class Orchestrator:
             restore_wan_bytes=restore_wan,
             restore_bytes_by_region=restore_by_region,
             recovery_energy_wh=recovery_energy_wh,
+            fault_counts=dict(inj.counts) if inj is not None else {},
+            crashes=inj.counts.get("crash", 0) if inj is not None else 0,
+            corrupted_shard_copies=inj.counts.get("corrupt", 0)
+            if inj is not None else 0,
         )
 
 

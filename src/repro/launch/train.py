@@ -5,7 +5,11 @@ exist.  ``--reduced`` (default on CPU) trains the smoke variant;
 ``--mesh data,model`` builds a local mesh from the visible devices so the
 same entrypoint drives a laptop, an edge mesh simulation
 (``--host-devices N``), or a real pod slice.  ``--local-sgd`` switches to
-the DiLoCo-style local-update loop (``--replicas`` × ``--inner-steps``).
+the DiLoCo-style local-update loop (``--replicas`` × ``--inner-steps``);
+``--async`` upgrades it to bounded-staleness async outer updates
+(``--quorum`` / ``--staleness-bound``), and ``--straggler-frac`` /
+``--crash-prob`` / ``--link-flap-prob`` inject a deterministic,
+seed-replayable fault plan (``--fault-seed``).
 
 Telemetry: ``--trace-out trace.json`` captures a Chrome-trace /
 Perfetto timeline of every step phase (data / fwd_bwd_opt / outer-sync /
@@ -58,6 +62,23 @@ def main() -> None:
                     help="local-SGD replica count")
     ap.add_argument("--inner-steps", type=int, default=8,
                     help="local-SGD inner steps per sync round (K)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="bounded-staleness async outer updates instead "
+                         "of the barrier sync round (implies --local-sgd)")
+    ap.add_argument("--quorum", type=int, default=0,
+                    help="async: replicas required before an outer "
+                         "update fires (0 = all replicas)")
+    ap.add_argument("--staleness-bound", type=int, default=0,
+                    help="async: drop + resync replicas more than S "
+                         "outer versions stale (0 = lockstep)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed the deterministic fault-injection plan")
+    ap.add_argument("--straggler-frac", type=float, default=0.0,
+                    help="fraction of replicas slowed 4-8x by the plan")
+    ap.add_argument("--crash-prob", type=float, default=0.0,
+                    help="per-round crash probability per replica")
+    ap.add_argument("--link-flap-prob", type=float, default=0.0,
+                    help="per-round link flap probability per replica")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome-trace/Perfetto JSON timeline")
     ap.add_argument("--metrics-out", default=None,
@@ -100,17 +121,30 @@ def main() -> None:
                        checkpoint_every=args.checkpoint_every,
                        resume=args.resume)
 
+    fault_plan = None
+    if args.straggler_frac or args.crash_prob or args.link_flap_prob:
+        from repro.core.faultinject import FaultPlan
+        fault_plan = FaultPlan(seed=args.fault_seed,
+                               straggler_frac=args.straggler_frac,
+                               crash_prob=args.crash_prob,
+                               link_flap_prob=args.link_flap_prob)
+
     def _run():
-        if args.local_sgd:
+        if args.local_sgd or args.async_mode:
             from repro.train.local_sgd import (LocalSGDConfig,
                                                train_local_sgd)
             ls = LocalSGDConfig(replicas=args.replicas,
                                 inner_steps=args.inner_steps,
                                 checkpoint_dir=args.checkpoint_dir,
                                 checkpoint_every_rounds=args.checkpoint_every,
-                                resume=args.resume)
-            return train_local_sgd(cfg, tc, ls, monitor=monitor,
-                                   metrics=registry)
+                                resume=args.resume,
+                                async_mode=args.async_mode,
+                                quorum=args.quorum or None,
+                                staleness_bound=args.staleness_bound)
+            return train_local_sgd(
+                cfg, tc, ls,
+                monitor=None if args.async_mode else monitor,
+                metrics=registry, fault_plan=fault_plan)
         return train(cfg, tc, monitor=monitor, metrics=registry)
 
     if args.mesh:
@@ -128,6 +162,15 @@ def main() -> None:
           f"{rate:.2f} steps/s  "
           f"{res.energy_wh:.3f} Wh modelled  "
           f"{led.operational_kg*1000:.3f} gCO2e")
+    if getattr(res, "mode", "") == "async":
+        print(f"[train] async: {res.outer_updates} outer updates, "
+              f"{res.dropped_stale} dropped stale, {res.resyncs} resyncs, "
+              f"{res.crashes} crashes, "
+              f"{res.virtual_tokens_per_s:.0f} virtual tok/s")
+        if res.fault_counts:
+            faults = " ".join(f"{k}={v}"
+                              for k, v in sorted(res.fault_counts.items()))
+            print(f"[train] faults: {faults}")
 
     if args.trace_out:
         from repro.obs import get_tracer

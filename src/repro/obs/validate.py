@@ -23,6 +23,24 @@ from typing import Any, Dict
 _PHASES = {"X", "i", "C", "M", "b", "e", "n"}
 
 
+def _check_fault_event(path: str, where: str, rec: Dict[str, Any]) -> bool:
+    """Fault-event schema: every ``cat == "fault"`` record must be named
+    ``fault.<kind>`` and carry the affected ``entity`` in its args (what
+    :class:`repro.core.faultinject.FaultInjector` emits)."""
+    if rec.get("cat") != "fault":
+        return False
+    name = rec.get("name", "")
+    if not (isinstance(name, str) and name.startswith("fault.")
+            and len(name) > len("fault.")):
+        raise ValueError(f"{path}: {where} fault event has bad name "
+                         f"{name!r} (want 'fault.<kind>')")
+    args = rec.get("args")
+    if not isinstance(args, dict) or "entity" not in args:
+        raise ValueError(f"{path}: {where} fault event {name!r} args "
+                         "missing 'entity'")
+    return True
+
+
 def validate_chrome_trace(path: str) -> Dict[str, int]:
     with open(path) as f:
         data = json.load(f)
@@ -48,6 +66,8 @@ def validate_chrome_trace(path: str) -> Dict[str, int]:
             dur = e.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 raise ValueError(f"{path}: event {i} (X) bad dur {dur!r}")
+        if _check_fault_event(path, f"event {i}", e):
+            counts["fault"] = counts.get("fault", 0) + 1
         counts[ph] = counts.get(ph, 0) + 1
     if counts.get("X", 0) == 0:
         raise ValueError(f"{path}: no complete (X) span events")
@@ -93,6 +113,8 @@ def validate_metrics_jsonl(path: str) -> Dict[str, int]:
                                  f"type {rec['type']!r}")
             counts["metric"] = counts.get("metric", 0) + 1
         elif "ph" in rec and "ts_us" in rec:      # raw trace event log
+            if _check_fault_event(path, f"line {i + 1}", rec):
+                counts["fault"] = counts.get("fault", 0) + 1
             counts["event"] = counts.get("event", 0) + 1
         else:
             raise ValueError(f"{path}: line {i + 1} unrecognized record: "

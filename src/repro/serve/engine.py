@@ -18,6 +18,16 @@ vLLM's recompute preemption).
 Every step is priced through the component energy model
 (``core.energy.monitor``) exactly as the trainers do, and the run summary
 converts energy to operational CO2e via ``core.carbon.accounting``.
+
+Robustness: requests whose queue wait exceeds ``ttft_deadline_s`` fail
+gracefully (an empty, ``failed`` completion — counted and traced as a
+``fault.deadline`` instant) instead of waiting forever under pressure;
+recompute preemption is bounded by ``max_requeues``, past which the
+request finishes with whatever it generated (``fault.requeue_limit``).
+A seeded :class:`~repro.core.faultinject.FaultPlan` can additionally
+force deterministic slot preemptions (``crashes(uid, step)`` — a serving
+worker blip), which is how the requeue bound and deadline behavior are
+exercised reproducibly.
 """
 
 from __future__ import annotations
@@ -35,6 +45,7 @@ from repro.core import flops as F
 from repro.core.carbon.accounting import CarbonLedger
 from repro.core.energy.devices import TPU_V5E, DeviceSpec
 from repro.core.energy.monitor import ComponentModel, EnergyMonitor
+from repro.core.faultinject import FaultInjector, FaultPlan
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.obs.metrics import MetricsRegistry
@@ -74,6 +85,11 @@ class EngineConfig:
     attn_impl: str = "gather"         # gather (XLA) | pallas (flash-decode)
     cache_dtype: str = "bfloat16"
     seed: int = 0
+    ttft_deadline_s: float = 0.0      # fail queued requests whose wait
+                                      # exceeds this (0 = no deadline)
+    max_requeues: int = 32            # recompute-preemption bound per
+                                      # request; past it the request
+                                      # finishes with what it has
 
 
 @dataclass
@@ -82,6 +98,8 @@ class Completion:
     prompt: List[int]
     tokens: List[int] = field(default_factory=list)
     preemptions: int = 0
+    failed: bool = False              # deadline / requeue-limit casualty
+    fail_reason: str = ""             # "deadline" | "requeue_limit"
 
 
 @dataclass
@@ -104,7 +122,8 @@ class ServeEngine:
     def __init__(self, params: PyTree, cfg: ModelConfig, ecfg: EngineConfig,
                  *, device: DeviceSpec = TPU_V5E,
                  intensity_kg_per_kwh: Optional[float] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 fault_plan: Optional[FaultPlan] = None):
         if not M.paged_decode_supported(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged serving needs attn/mlp/moe-only decoders "
@@ -139,6 +158,10 @@ class ServeEngine:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._tracer = get_tracer()
         self._rt: Dict[str, _ReqTelemetry] = {}
+        # fault events (deadline expiries, requeue-limit hits, injected
+        # preemptions) always flow through an injector so they land on
+        # the obs timeline with the validated fault schema
+        self.injector = FaultInjector(fault_plan, registry=self.metrics)
 
         from repro.train.trainer import donation_supported
         donate = (1,) if donation_supported() else ()
@@ -195,32 +218,94 @@ class ServeEngine:
             self._phase_end(req.uid, "admitted")
             self._phase_begin(req.uid, "prefill", slot=slot)
 
-    def _preempt_youngest(self) -> bool:
-        """Free the least-progressed slot, folding its generated tokens
-        into a re-queued prompt (recompute preemption).  Returns False
-        when nothing is left to preempt."""
-        live = [i for i, s in enumerate(self._slots) if s is not None]
-        if not live:
-            return False
-        slot = min(live, key=lambda i: self._slots[i].fed)
+    def _fail_request(self, uid: str, prompt: List[int],
+                      generated: List[int], reason: str, **attrs) -> None:
+        """Gracefully fail a request: it completes with whatever it
+        generated (nothing, for a queue-deadline expiry), marked
+        ``failed``, counted, and traced as a ``fault.<reason>`` instant
+        — instead of waiting or recomputing forever under pressure."""
+        orig = self._orig_prompts[uid]
+        full = list(prompt) + list(generated)
+        self.completions[uid] = Completion(
+            uid=uid, prompt=orig, tokens=full[len(orig):],
+            preemptions=self._preempt_counts.get(uid, 0),
+            failed=True, fail_reason=reason)
+        self._phase_end(uid, f"failed_{reason}")
+        self.injector.emit(reason, uid, **attrs)
+        self.metrics.counter(f"serve/failed_{reason}").inc(1)
+
+    def _preempt_slot(self, slot: int, *, injected: bool = False) -> None:
+        """Free one slot, folding its generated tokens into a re-queued
+        prompt (recompute preemption).  Past ``max_requeues`` the
+        request fails gracefully with its partial output instead of
+        recomputing forever."""
         s = self._slots[slot]
+        self.kv.close_slot(slot)
+        self._slots[slot] = None
+        count = self._preempt_counts.get(s.req.uid, 0) + 1
+        self._preempt_counts[s.req.uid] = count
+        self.metrics.counter("serve/preemptions").inc(1)
+        if count > self.ecfg.max_requeues:
+            self._fail_request(s.req.uid, s.req.prompt, s.generated,
+                               "requeue_limit", requeues=count - 1,
+                               bound=self.ecfg.max_requeues)
+            return
         merged = Request(uid=s.req.uid,
                          prompt=list(s.req.prompt) + list(s.generated),
                          max_new=s.req.max_new - len(s.generated),
                          sampling=s.req.sampling, eos_id=s.req.eos_id)
-        self.kv.close_slot(slot)
-        self._slots[slot] = None
         self._waiting.appendleft(merged)
-        self._preempt_counts[merged.uid] = \
-            self._preempt_counts.get(merged.uid, 0) + 1
         # lifecycle: whatever phase was running ends preempted; the
         # request re-queues (its TTFT clock keeps running from submit)
         self._phase_end(merged.uid, "preempted",
                         generated=len(s.generated))
         self._phase_begin(merged.uid, "queued", requeued=True)
-        self._tracer.instant("preempt", "serve", uid=merged.uid)
-        self.metrics.counter("serve/preemptions").inc(1)
+        self._tracer.instant("preempt", "serve", uid=merged.uid,
+                             injected=injected)
+
+    def _preempt_youngest(self) -> bool:
+        """Recompute-preempt the least-progressed slot.  Returns False
+        when nothing is left to preempt."""
+        live = [i for i, s in enumerate(self._slots) if s is not None]
+        if not live:
+            return False
+        self._preempt_slot(min(live, key=lambda i: self._slots[i].fed))
         return True
+
+    def _expire_deadlines(self) -> None:
+        """Fail queued requests whose wait blew the TTFT deadline (a
+        request that already produced its first token is never
+        expired — the deadline is on *time to first token* only)."""
+        if self.ecfg.ttft_deadline_s <= 0 or not self._waiting:
+            return
+        now = self._tracer.now_s()
+        keep: Deque[Request] = deque()
+        for req in self._waiting:
+            rt = self._rt.get(req.uid)
+            waited = now - rt.submit_s if rt is not None else 0.0
+            if rt is not None and rt.first_token_s < 0 \
+                    and waited > self.ecfg.ttft_deadline_s:
+                self._fail_request(req.uid, req.prompt, [], "deadline",
+                                   waited_s=round(waited, 4),
+                                   deadline_s=self.ecfg.ttft_deadline_s)
+            else:
+                keep.append(req)
+        self._waiting = keep
+
+    def _inject_preemptions(self) -> None:
+        """Deterministic worker blips from the fault plan: a slot whose
+        request the plan crashes at this step loses its KV state and
+        recompute-preempts (bounded by ``max_requeues`` like any other
+        preemption)."""
+        plan = self.injector.plan
+        if not plan.active or plan.crash_prob <= 0:
+            return
+        for i in range(self.ecfg.max_slots):
+            s = self._slots[i]
+            if s is not None and plan.crashes(s.req.uid, self.steps):
+                self.injector.emit("crash", s.req.uid, step=self.steps,
+                                   slot=i)
+                self._preempt_slot(i, injected=True)
 
     def _ensure_capacity(self) -> None:
         """Give every active slot a page for this step's token, preempting
@@ -240,6 +325,8 @@ class ServeEngine:
             return self._step_inner(sp)
 
     def _step_inner(self, sp) -> int:
+        self._expire_deadlines()
+        self._inject_preemptions()
         self._admit()
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
@@ -366,6 +453,7 @@ class ServeEngine:
         self._frag_tokens_peak = 0.0
         self._util_peak = 0.0
         self.metrics = MetricsRegistry()    # fresh histogram window
+        self.injector.registry = self.metrics
         self._rt = {uid: rt for uid, rt in self._rt.items()
                     if rt.phase is not None}    # keep live lifecycles
         self.kv.allocator.peak_blocks_in_use = self.kv.allocator.blocks_in_use
@@ -406,6 +494,12 @@ class ServeEngine:
                 "serve/kv_utilization_peak").value,
             **self.kv.stats(),
         }
+        out["deadline_failures"] = float(
+            self.metrics.counter("serve/failed_deadline").value)
+        out["requeue_limit_failures"] = float(
+            self.metrics.counter("serve/failed_requeue_limit").value)
+        out["requests_failed"] = (out["deadline_failures"]
+                                  + out["requeue_limit_failures"])
         ttft = self.metrics.histogram("serve/ttft_s")
         if ttft.count:
             out["ttft_p50_s"] = ttft.percentile(50)

@@ -18,10 +18,36 @@ the pseudo-gradients additionally pass through the repro's gradient
 compressors (int8 / top-k with per-replica error feedback), composing
 with the collective cost models in :mod:`repro.core.net`.
 
-With ``inner_steps=1``, ``outer_momentum=0``, ``outer_lr=1`` and one
-replica the outer loop is the identity and the trajectory reduces
-exactly to the plain inner-optimizer trainer — the correctness anchor
-the tests pin down.
+Two outer-loop modes:
+
+* **Synchronous** (default): every round waits for all replicas — one
+  slow radio link stalls the fleet.  With ``inner_steps=1``,
+  ``outer_momentum=0``, ``outer_lr=1`` and one replica the outer loop is
+  the identity and the trajectory reduces exactly to the plain
+  inner-optimizer trainer — the correctness anchor the tests pin down.
+* **Bounded-staleness async** (``async_mode=True``): the outer update is
+  *quorum-gated* — it applies as soon as ``quorum`` replicas have
+  reported since the last update, so a straggler never stalls the round.
+  Late pseudo-gradients fold into the *next* update with
+  staleness-weighted averaging (weight ``1/(1+s)`` for a delta computed
+  against a global version ``s`` updates old); past the hard bound
+  ``staleness_bound`` a replica's work is dropped and it re-syncs from
+  the current global params.  Per-replica K derives from the placement's
+  region groups (slower regions run proportionally fewer inner steps so
+  rounds finish together).  With ``quorum = replicas`` and
+  ``staleness_bound = 0`` the async engine is **bit-identical** to the
+  synchronous loop — the reduction property ``tests/test_faults.py``
+  pins down and ``benchmarks/bench_faults.py`` gates.
+
+Both modes drive a modelled **virtual fleet clock** (per-replica step
+times from the placement's device specs, or ``nominal_step_s``), and
+both consume a seeded :class:`repro.core.faultinject.FaultPlan`:
+straggler slowdowns, crash/rejoin churn and link flaps/jitter move the
+virtual clock (and, in async mode, which deltas arrive when) while every
+injected fault lands on the :mod:`repro.obs` timeline as a
+``fault.<kind>`` instant.  ``virtual_tokens_per_s`` is what
+``bench_faults.py`` compares across modes under an injected straggler
+distribution.
 
 Inner steps run the same jit'd train step as :mod:`repro.train.trainer`
 on whatever mesh is ambient; replicas are simulated host-side as
@@ -39,6 +65,7 @@ per-step wall-clock).
 
 from __future__ import annotations
 
+import heapq
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -48,6 +75,7 @@ import jax.numpy as jnp
 
 from repro.core import flops as F
 from repro.core.energy.monitor import EnergyMonitor
+from repro.core.faultinject import FaultInjector, FaultPlan
 from repro.data.pipeline import make_batch_fn
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import get_tracer
@@ -73,6 +101,14 @@ class LocalSGDConfig:
     checkpoint_every_rounds: int = 0
     checkpoint_replication: int = 1  # §5 neighbour shard copies
     resume: bool = False             # restore newest complete ckpt first
+    # ---- bounded-staleness async outer loop -------------------------
+    async_mode: bool = False         # quorum-gated outer updates
+    quorum: Optional[int] = None     # Q: updates apply at Q reports
+                                     # (None -> all replicas)
+    staleness_bound: int = 0         # S: max global-versions lag before
+                                     # a delta is dropped + resynced
+    nominal_step_s: float = 0.1      # modelled inner-step seconds when
+                                     # no placement prices the devices
 
 
 @dataclass
@@ -90,6 +126,19 @@ class LocalSGDResult:
     replica_regions: List[str] = field(default_factory=list)  # per replica,
                                              # when a placement maps them
     sync_wan_bytes_per_round: float = 0.0    # modelled WAN share
+    # ---- async / fault-injection accounting -------------------------
+    mode: str = "sync"
+    outer_updates: int = 0                   # == rounds in sync mode
+    per_replica_k: List[int] = field(default_factory=list)
+    inner_steps_total: int = 0               # steps actually run
+    contributed_steps: int = 0               # steps whose deltas merged
+    dropped_stale: int = 0                   # deltas past the S bound
+    late_merged: int = 0                     # deltas folded with s >= 1
+    resyncs: int = 0
+    crashes: int = 0
+    virtual_time_s: float = 0.0              # modelled fleet wall-clock
+    virtual_tokens_per_s: float = 0.0        # contributed tokens / vclock
+    fault_counts: Dict[str, int] = field(default_factory=dict)
 
 
 def _outer_update(global_params: PyTree, mean_delta: PyTree,
@@ -112,12 +161,132 @@ def _outer_update(global_params: PyTree, mean_delta: PyTree,
             jax.tree.unflatten(tdef, [o[1] for o in out]))
 
 
+# ------------------------------------------------------------------ helpers
+
+def _replica_speeds(placement, R: int) -> Optional[List[float]]:
+    """Effective FLOP/s per replica, gated by its slowest stage device
+    (the pipeline bound); None without a placement."""
+    if placement is None:
+        return None
+    return [min(sp.device.effective_flops for sp in pipe)
+            for pipe in placement.pipelines]
+
+
+def per_replica_inner_steps(ls: LocalSGDConfig, placement) -> List[int]:
+    """Per-replica K derived from the placement's region groups: every
+    replica in a region shares that region's K, scaled by the region's
+    slowest replica relative to the fastest region — slow regions run
+    proportionally fewer inner steps so rounds finish together instead
+    of the fleet idling on the slowest radio link.  Without a placement
+    every replica runs the global K."""
+    R = ls.replicas
+    speeds = _replica_speeds(placement, R)
+    if speeds is None:
+        return [ls.inner_steps] * R
+    region_speed: Dict[str, float] = {}
+    groups = placement.region_groups()
+    for reg, reps in groups.items():
+        region_speed[reg] = min(speeds[r] for r in reps)
+    fastest = max(region_speed.values())
+    ks = [0] * R
+    for reg, reps in groups.items():
+        k = max(1, round(ls.inner_steps * region_speed[reg] / fastest))
+        for r in reps:
+            ks[r] = k
+    return ks
+
+
+def _replica_step_times(ls: LocalSGDConfig, placement,
+                        step_flops: float) -> List[float]:
+    """Modelled seconds per inner step, per replica (virtual clock)."""
+    speeds = _replica_speeds(placement, ls.replicas)
+    if speeds is None:
+        return [ls.nominal_step_s] * ls.replicas
+    return [step_flops / s for s in speeds]
+
+
+def _price_sync_comm(ls: LocalSGDConfig, placement, topology,
+                     sync_algorithm: str, global_params
+                     ) -> Tuple[float, float, List[str]]:
+    """(modelled outer-sync seconds per round, WAN bytes per round,
+    replica->region map) over the placement/topology; zeros without."""
+    if topology is None and placement is None:
+        return 0.0, 0.0, []
+    from repro.core.net import sync_cost
+    R = ls.replicas
+    n_elems = sum(x.size for x in jax.tree.leaves(global_params))
+    if placement is not None:
+        # each stage slot syncs its layer shard over that slot's
+        # replica group (disjoint links — concurrent across slots,
+        # the slowest slot gates); the region-grouped placement is
+        # what makes the hierarchical collective pay intra-region
+        # rates for most of the volume
+        topo = placement.topology
+        L = placement.num_layers
+        t_round = 0.0
+        wan = 0.0
+        for i, group in enumerate(placement.dp_groups()):
+            shard = int(n_elems * placement.layer_counts[i] / L)
+            c = sync_cost(topo, group, shard, algorithm=sync_algorithm,
+                          compress=ls.compress, dtype_bytes=4)
+            t_round = max(t_round, c.time_s)
+            wan += c.wan_bytes
+        regions = [""] * R
+        for reg, reps in placement.region_groups().items():
+            for r in reps:
+                regions[r] = reg
+        return t_round, wan, regions
+    group = topology.devices[:R]
+    c = sync_cost(topology, group, n_elems, algorithm=sync_algorithm,
+                  compress=ls.compress, dtype_bytes=4)
+    return c.time_s, c.wan_bytes, []
+
+
+def _restore_outer_state(ls: LocalSGDConfig, global_params: PyTree,
+                         momentum: PyTree) -> Tuple[PyTree, PyTree, int]:
+    """Elastic resume: the DiLoCo state (global params + outer Nesterov
+    momentum) restores from any layout the previous fleet wrote —
+    layer-sliced under different stage boundaries included — so churn
+    between runs loses nothing but the inner-optimizer moments (which
+    DiLoCo re-warms locally)."""
+    if not (ls.resume and ls.checkpoint_dir):
+        return global_params, momentum, 0
+    from repro.checkpoint import ckpt
+    found = ckpt.latest_complete_step(ls.checkpoint_dir)
+    if found is None:
+        return global_params, momentum, 0
+    state = ckpt.restore(ls.checkpoint_dir,
+                         {"params": global_params, "outer_m": momentum},
+                         step=found)
+    print(f"[local_sgd] resumed from round {found} ({ls.checkpoint_dir})")
+    return state["params"], state["outer_m"], found
+
+
+def _write_checkpoint(ls: LocalSGDConfig, placement, global_params: PyTree,
+                      momentum: PyTree, round_no: int, tr) -> None:
+    from repro.checkpoint import ckpt
+    with tr.span("checkpoint", "local_sgd",
+                 metric="local_sgd/checkpoint_s", round=round_no):
+        state = {"params": global_params, "outer_m": momentum}
+        if placement is not None:
+            # stage slots shard the outer state over the spec's
+            # replica/region groups (each slot's nodes hold its
+            # layer range; replication adds §5 neighbour copies)
+            ckpt.save_for_placement(
+                ls.checkpoint_dir, round_no, state, placement,
+                replication=ls.checkpoint_replication)
+        else:
+            ckpt.save(ls.checkpoint_dir, round_no, state)
+        ckpt.prune(ls.checkpoint_dir)
+
+
 def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                     opt_cfg: Optional[adamw.OptConfig] = None, *,
                     topology=None, placement=None,
                     sync_algorithm: str = "hierarchical",
                     monitor: Optional[EnergyMonitor] = None,
-                    metrics: Optional[MetricsRegistry] = None
+                    metrics: Optional[MetricsRegistry] = None,
+                    fault_plan: Optional[FaultPlan] = None
                     ) -> LocalSGDResult:
     """Run ``max(1, tc.steps // K)`` whole sync rounds of K inner steps
     per replica (``tc.steps`` rounded down to whole rounds; at least
@@ -134,6 +303,15 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     slot over that slot's replica nodes — layer-proportional shards,
     concurrent across slots — so a region-grouped placement pays
     intra-region rates first and crosses the WAN O(regions) times.
+
+    ``fault_plan`` (a seeded :class:`repro.core.faultinject.FaultPlan`)
+    injects stragglers, crash/rejoin churn and link jitter into the
+    modelled virtual clock deterministically — the same plan replays
+    bit-identically.  In the synchronous mode faults only slow the
+    virtual clock (every round still waits for everyone — that *is* the
+    failure mode ``async_mode`` exists to fix); in async mode they also
+    decide which deltas arrive late, get staleness-weighted, or are
+    dropped at the bound.
     """
     if ls.replicas < 1 or ls.inner_steps < 1:
         raise ValueError(
@@ -151,6 +329,22 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         raise ValueError(
             f"topology has {len(topology.devices)} devices but "
             f"{ls.replicas} replicas need to sync over it")
+    Q = ls.quorum if ls.quorum is not None else ls.replicas
+    if not 1 <= Q <= ls.replicas:
+        raise ValueError(f"quorum={Q} must be in 1..{ls.replicas}")
+    if ls.staleness_bound < 0:
+        raise ValueError(f"staleness_bound={ls.staleness_bound} must be "
+                         ">= 0")
+    if ls.async_mode:
+        if monitor is not None:
+            raise ValueError(
+                "EnergyMonitor needs real per-step wall-clock, which the "
+                "async engine's virtual clock replaces; price energy "
+                "from the placement instead")
+        return _train_async(cfg, tc, ls, opt_cfg, topology=topology,
+                            placement=placement,
+                            sync_algorithm=sync_algorithm, metrics=metrics,
+                            fault_plan=fault_plan, quorum=Q)
     opt_cfg = opt_cfg or adamw.OptConfig(
         learning_rate=3e-4, warmup_steps=max(10, tc.steps // 20),
         decay_steps=tc.steps)
@@ -158,23 +352,8 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     global_params = PM.init_params(cfg, rng)
     momentum = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                             global_params)
-    start_round = 0
-    if ls.resume and ls.checkpoint_dir:
-        # elastic resume: the DiLoCo state (global params + outer
-        # Nesterov momentum) restores from any layout the previous
-        # fleet wrote — layer-sliced under different stage boundaries
-        # included — so churn between runs loses nothing but the
-        # inner-optimizer moments (which DiLoCo re-warms locally)
-        from repro.checkpoint import ckpt
-        found = ckpt.latest_complete_step(ls.checkpoint_dir)
-        if found is not None:
-            state = ckpt.restore(
-                ls.checkpoint_dir,
-                {"params": global_params, "outer_m": momentum}, step=found)
-            global_params, momentum = state["params"], state["outer_m"]
-            start_round = found
-            print(f"[local_sgd] resumed from round {found} "
-                  f"({ls.checkpoint_dir})")
+    global_params, momentum, start_round = _restore_outer_state(
+        ls, global_params, momentum)
 
     from repro.train.trainer import effective_donate, make_jit_train_step
     step_fn = make_jit_train_step(cfg, tc, opt_cfg)
@@ -194,10 +373,16 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     res = LocalSGDResult()
     rounds = max(1, tc.steps // ls.inner_steps)
     tr = get_tracer()
+    inj = FaultInjector(fault_plan, registry=metrics) \
+        if fault_plan is not None else None
     # per-replica pseudo-gradient wire bytes (constant across rounds:
     # the compressed-delta layout depends only on the param tree)
     wire_b = wire_bytes(global_params,
                         ls.compress or CompressConfig(method="none"))
+    comm_round_s, wan_round, replica_regions = _price_sync_comm(
+        ls, placement, topology, sync_algorithm, global_params)
+    step_times = _replica_step_times(ls, placement, step_flops)
+    vclock = 0.0
     t0 = time.time()
     t_prev = t0
     for rnd in range(rounds):
@@ -208,6 +393,7 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         round_loss_dev = jnp.float32(0.0)    # accumulated on device
         r0_losses: List[jax.Array] = []      # replica-0 device scalars
         deltas: Optional[PyTree] = None
+        round_dur = 0.0                      # virtual: slowest replica
         for r in range(R):
             rep_span = tr.span("replica", "local_sgd", replica=r)
             rep_span.__enter__()
@@ -247,6 +433,29 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                 deltas = delta if deltas is None else jax.tree.map(
                     lambda a, b: a + b, deltas, delta)
             rep_span.__exit__(None, None, None)
+            # virtual clock: compute gated by the replica's straggler
+            # factor; a crash in sync mode stalls the whole round until
+            # the device rejoins and redoes its work (the trajectory is
+            # unchanged — that stall is exactly what async mode removes)
+            dur_r = ls.inner_steps * step_times[r]
+            if inj is not None:
+                slow = inj.plan.slowdown(r)
+                dur_r *= slow
+                if slow > 1.0 and rnd == 0:
+                    inj.emit("straggle", r, ts_s=vclock,
+                             slowdown=round(slow, 3))
+                jit = inj.plan.jitter_s(r, rnd)
+                if jit > 0.0:
+                    inj.emit("link_flap", r, ts_s=vclock,
+                             jitter_s=round(jit, 3), round=rnd)
+                    dur_r += jit
+                if inj.plan.crashes(r, rnd):
+                    wait = inj.plan.rejoin_after(r, rnd)
+                    inj.emit("crash", r, ts_s=vclock, round=rnd,
+                             rejoin_rounds=wait)
+                    res.crashes += 1
+                    dur_r *= 1 + wait
+            round_dur = max(round_dur, dur_r)
 
         with tr.span("outer_sync", "local_sgd",
                      metric="local_sgd/outer_sync_s",
@@ -254,6 +463,7 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
             mean_delta = jax.tree.map(lambda d: d / R, deltas)
             global_params, momentum = outer_fn(global_params, mean_delta,
                                                momentum)
+        vclock += round_dur + comm_round_s
         if metrics is not None:
             # fleet bytes shipped this round: every replica uploads its
             # (compressed) pseudo-gradient
@@ -264,22 +474,8 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         locals_ = [global_params] * R
         if ls.checkpoint_dir and ls.checkpoint_every_rounds \
                 and (rnd + 1) % ls.checkpoint_every_rounds == 0:
-            from repro.checkpoint import ckpt
-            with tr.span("checkpoint", "local_sgd",
-                         metric="local_sgd/checkpoint_s",
-                         round=start_round + rnd + 1):
-                state = {"params": global_params, "outer_m": momentum}
-                if placement is not None:
-                    # stage slots shard the outer state over the spec's
-                    # replica/region groups (each slot's nodes hold its
-                    # layer range; replication adds §5 neighbour copies)
-                    ckpt.save_for_placement(
-                        ls.checkpoint_dir, start_round + rnd + 1, state,
-                        placement, replication=ls.checkpoint_replication)
-                else:
-                    ckpt.save(ls.checkpoint_dir, start_round + rnd + 1,
-                              state)
-                ckpt.prune(ls.checkpoint_dir)
+            _write_checkpoint(ls, placement, global_params, momentum,
+                              start_round + rnd + 1, tr)
         # ONE host sync per round: replica-0 per-step losses + fleet mean
         with tr.span("metrics_drain", "local_sgd"):
             fetched = jax.device_get({"r0": r0_losses,
@@ -300,46 +496,286 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
 
     wall = time.time() - t0
     res.rounds = rounds
+    res.outer_updates = rounds
     res.resumed_from_round = start_round
     res.final_loss = res.round_losses[-1]
     res.steps_per_s = rounds * ls.inner_steps * R / wall
     res.sync_wire_bytes_per_round = wire_b
+    res.per_replica_k = [ls.inner_steps] * R
+    res.inner_steps_total = rounds * ls.inner_steps * R
+    res.contributed_steps = res.inner_steps_total
+    res.virtual_time_s = vclock
+    if vclock > 0:
+        res.virtual_tokens_per_s = (res.contributed_steps * tc.batch
+                                    * tc.seq_len / vclock)
+    if inj is not None:
+        res.fault_counts = dict(inj.counts)
     if monitor is not None:
         res.energy_wh = monitor.total_wh
     if topology is not None or placement is not None:
-        from repro.core.net import sync_cost
-        n_elems = sum(x.size for x in jax.tree.leaves(global_params))
-        if placement is not None:
-            # each stage slot syncs its layer shard over that slot's
-            # replica group (disjoint links — concurrent across slots,
-            # the slowest slot gates); the region-grouped placement is
-            # what makes the hierarchical collective pay intra-region
-            # rates for most of the volume
-            topo = placement.topology
-            L = placement.num_layers
-            t_round = 0.0
-            wan = 0.0
-            for i, group in enumerate(placement.dp_groups()):
-                shard = int(n_elems * placement.layer_counts[i] / L)
-                c = sync_cost(topo, group, shard,
-                              algorithm=sync_algorithm,
-                              compress=ls.compress, dtype_bytes=4)
-                t_round = max(t_round, c.time_s)
-                wan += c.wan_bytes
-            res.comm_time_s_per_round = t_round
-            res.sync_wan_bytes_per_round = wan
-            regions = [""] * R
-            for reg, reps in placement.region_groups().items():
-                for r in reps:
-                    regions[r] = reg
-            res.replica_regions = regions
-        else:
-            group = topology.devices[:R]
-            c = sync_cost(topology, group, n_elems,
-                          algorithm=sync_algorithm, compress=ls.compress,
-                          dtype_bytes=4)
-            res.comm_time_s_per_round = c.time_s
-            res.sync_wan_bytes_per_round = c.wan_bytes
-        res.comm_time_s_per_step = res.comm_time_s_per_round \
-            / ls.inner_steps
+        res.comm_time_s_per_round = comm_round_s
+        res.sync_wan_bytes_per_round = wan_round
+        res.replica_regions = replica_regions
+        res.comm_time_s_per_step = comm_round_s / ls.inner_steps
     return res
+
+
+# ------------------------------------------------- bounded-staleness async
+
+@dataclass
+class _Replica:
+    """Host-side async replica state (one edge pipeline)."""
+    params: PyTree = None            # local params while running
+    opt_state: PyTree = None
+    error: Optional[PyTree] = None   # compressor error feedback
+    start_params: PyTree = None      # global snapshot the round began from
+    start_version: int = 0           # global version of that snapshot
+    round_idx: int = 0               # personal round counter (plan keys)
+    idle: bool = False               # reported, waiting for next update
+
+
+def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
+                 opt_cfg: Optional[adamw.OptConfig], *, topology, placement,
+                 sync_algorithm: str, metrics: Optional[MetricsRegistry],
+                 fault_plan: Optional[FaultPlan], quorum: int
+                 ) -> LocalSGDResult:
+    """Event-driven bounded-staleness async outer loop.
+
+    Replicas run on a modelled virtual clock; the outer update applies
+    the moment ``quorum`` replicas have reported since the last update.
+    Reported replicas idle until the update, then restart from the new
+    global params; still-running replicas keep going and their deltas
+    arrive *stale* — folded into the next update with weight
+    ``1/(1+staleness)`` up to ``staleness_bound``, dropped (and the
+    replica re-synced from global) past it.  A crashed replica's work is
+    lost; it rejoins ``rejoin_after`` rounds later and re-syncs.
+    Deterministic given (seed, plan): event ties break on replica id and
+    every fault draw is keyed, so identical configs replay identical
+    trajectories bit-for-bit.
+    """
+    opt_cfg = opt_cfg or adamw.OptConfig(
+        learning_rate=3e-4, warmup_steps=max(10, tc.steps // 20),
+        decay_steps=tc.steps)
+    global_params = PM.init_params(cfg, jax.random.PRNGKey(tc.seed))
+    momentum = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            global_params)
+    global_params, momentum, start_round = _restore_outer_state(
+        ls, global_params, momentum)
+
+    from repro.train.trainer import effective_donate, make_jit_train_step
+    step_fn = make_jit_train_step(cfg, tc, opt_cfg)
+    donating = effective_donate(tc)
+    outer_fn = jax.jit(lambda g, d, m: _outer_update(g, d, m, ls))
+
+    R = ls.replicas
+    S = ls.staleness_bound
+    ks = per_replica_inner_steps(ls, placement)
+    step_flops = F.train_flops(cfg, tc.batch, tc.seq_len,
+                               remat=tc.remat != "none")
+    step_times = _replica_step_times(ls, placement, step_flops)
+    comm_round_s, wan_round, replica_regions = _price_sync_comm(
+        ls, placement, topology, sync_algorithm, global_params)
+    wire_b = wire_bytes(global_params,
+                        ls.compress or CompressConfig(method="none"))
+    tr = get_tracer()
+    inj = FaultInjector(fault_plan, registry=metrics)
+    plan = inj.plan
+
+    reps = [_Replica(start_params=global_params,
+                     opt_state=adamw.init_opt_state(global_params, opt_cfg))
+            for _ in range(R)]
+    streams = [make_batch_fn(cfg, tc.batch, tc.seq_len, tc.seed + 1000 * r)
+               for r in range(R)]
+
+    res = LocalSGDResult(mode="async", per_replica_k=list(ks))
+    rounds = max(1, tc.steps // ls.inner_steps)
+    version = 0
+    # pending outer-update reports: replica -> (delta, weight, last_loss)
+    reports: Dict[int, Tuple[PyTree, float, jax.Array]] = {}
+    events: List[Tuple[float, int, str]] = []   # (t, replica, kind)
+
+    def _round_dur(r: int) -> float:
+        dur = ks[r] * step_times[r] * plan.slowdown(r)
+        return dur + plan.jitter_s(r, reps[r].round_idx)
+
+    def _start_round(r: int, t: float) -> None:
+        """Begin replica r's next personal round at virtual time t."""
+        rep = reps[r]
+        rep.idle = False
+        rep.start_params = global_params
+        rep.start_version = version
+        slow = plan.slowdown(r)
+        if slow > 1.0 and rep.round_idx == 0:
+            inj.emit("straggle", r, ts_s=t, slowdown=round(slow, 3))
+        if plan.crashes(r, rep.round_idx):
+            wait = plan.rejoin_after(r, rep.round_idx)
+            inj.emit("crash", r, ts_s=t, round=rep.round_idx,
+                     rejoin_rounds=wait)
+            res.crashes += 1
+            rep.round_idx += 1
+            heapq.heappush(
+                events, (t + wait * ks[r] * step_times[r] * slow, r,
+                         "rejoin"))
+            return
+        jit = plan.jitter_s(r, rep.round_idx)
+        if jit > 0.0:
+            inj.emit("link_flap", r, ts_s=t, jitter_s=round(jit, 3),
+                     round=rep.round_idx)
+        dur = _round_dur(r)
+        rep.round_idx += 1
+        heapq.heappush(events, (t + dur, r, "report"))
+
+    def _run_inner(r: int) -> Tuple[PyTree, jax.Array, List[jax.Array]]:
+        """Host-execute replica r's K_r inner steps; returns (delta,
+        last-step loss, per-step losses)."""
+        rep = reps[r]
+        p = jax.tree.map(lambda x: x.copy(), rep.start_params) \
+            if donating else rep.start_params
+        s = rep.opt_state
+        losses: List[jax.Array] = []
+        for _ in range(ks[r]):
+            with tr.span("inner_step", "local_sgd",
+                         metric="local_sgd/inner_step_s"):
+                batch = jax.device_put(next(streams[r]))
+                p, s, metrics_d = step_fn(p, s, batch)
+            losses.append(metrics_d["loss"])
+        rep.params, rep.opt_state = p, s
+        with tr.span("pseudograd", "local_sgd", replica=r,
+                     wire_bytes=wire_b):
+            delta = jax.tree.map(
+                lambda g, l: g.astype(jnp.float32) - l.astype(jnp.float32),
+                rep.start_params, p)
+            if ls.compress is not None and ls.compress.method != "none":
+                delta, rep.error = compress_grads(delta, rep.error,
+                                                  ls.compress)
+        return delta, metrics_d["loss"], losses
+
+    def _apply_update(t: float) -> float:
+        """Weighted outer update from the buffered reports; returns the
+        update's virtual completion time."""
+        nonlocal global_params, momentum, version
+        order = sorted(reports)
+        weights = [reports[r][1] for r in order]
+        uniform = all(w == 1.0 for w in weights)
+        acc = None
+        for r in order:
+            d, w, _ = reports[r]
+            term = d if uniform else jax.tree.map(lambda x: x * w, d)
+            acc = term if acc is None else jax.tree.map(
+                lambda a, b: a + b, acc, term)
+        wsum = float(len(order)) if uniform else sum(weights)
+        mean_delta = jax.tree.map(lambda d: d / wsum, acc)
+        with tr.span("outer_sync", "local_sgd",
+                     metric="local_sgd/outer_sync_s",
+                     wire_bytes_per_replica=wire_b, reports=len(order),
+                     version=version):
+            global_params, momentum = outer_fn(global_params, mean_delta,
+                                               momentum)
+        version += 1
+        # fleet-mean loss of the contributing replicas' last inner steps
+        loss_dev = jnp.float32(0.0)
+        for r in order:
+            loss_dev = loss_dev + reports[r][2]
+        round_loss = float(jax.device_get(loss_dev)) / len(order)
+        res.round_losses.append(round_loss)
+        res.contributed_steps += sum(ks[r] for r in order)
+        if metrics is not None:
+            metrics.counter("local_sgd/pseudograd_bytes").inc(
+                wire_b * len(order))
+            metrics.counter("local_sgd/rounds").inc(1)
+            metrics.histogram("local_sgd/round_loss", lo=1e-4,
+                              hi=1e4).observe(round_loss)
+        tr.complete("outer_update", ts_s=t, dur_s=comm_round_s,
+                    cat="local_sgd", track="local_sgd/outer",
+                    version=version, reports=len(order),
+                    round_loss=round(round_loss, 6))
+        reports.clear()
+        return t + comm_round_s
+
+    vclock = 0.0
+    t0 = time.time()
+    for r in range(R):
+        _start_round(r, 0.0)
+    while version < rounds and events:
+        t, r, kind = heapq.heappop(events)
+        vclock = max(vclock, t)
+        rep = reps[r]
+        if kind == "rejoin":
+            # the crashed device is back but its local state is gone:
+            # re-sync from the current global params and start fresh
+            inj.emit("rejoin", r, ts_s=t)
+            inj.emit("resync", r, ts_s=t, version=version)
+            res.resyncs += 1
+            _start_round(r, t)
+            continue
+        delta, last_loss, losses = _run_inner(r)
+        res.inner_steps_total += ks[r]
+        if r == 0:
+            fetched = jax.device_get(losses)
+            res.losses.extend(float(x) for x in fetched)
+            if metrics is not None:
+                for x in fetched:
+                    metrics.histogram("local_sgd/loss", lo=1e-4,
+                                      hi=1e4).observe(float(x))
+        stale = version - rep.start_version
+        tr.complete("async_round", ts_s=t - _round_dur_last(rep, ks, r,
+                                                            step_times,
+                                                            plan),
+                    dur_s=_round_dur_last(rep, ks, r, step_times, plan),
+                    cat="local_sgd", track=f"replica:{r}",
+                    staleness=stale, k=ks[r])
+        if stale > S:
+            # past the hard bound: the delta would drag the global
+            # params toward a stale point — drop it and re-sync the
+            # replica from the current global (it lost K_r steps of
+            # work, which is exactly the price the bound caps)
+            inj.emit("drop_stale", r, ts_s=t, staleness=stale, bound=S)
+            inj.emit("resync", r, ts_s=t, version=version)
+            res.dropped_stale += 1
+            res.resyncs += 1
+            _start_round(r, t)
+        else:
+            if stale > 0:
+                res.late_merged += 1
+            reports[r] = (delta, 1.0 / (1.0 + stale), last_loss)
+            rep.idle = True
+            if len(reports) >= quorum:
+                t_up = _apply_update(t)
+                vclock = max(vclock, t_up)
+                if version >= rounds:
+                    break
+                if ls.checkpoint_dir and ls.checkpoint_every_rounds \
+                        and version % ls.checkpoint_every_rounds == 0:
+                    _write_checkpoint(ls, placement, global_params,
+                                      momentum, start_round + version, tr)
+                for i in range(R):
+                    if reps[i].idle:
+                        _start_round(i, t_up)
+
+    wall = time.time() - t0
+    res.rounds = version
+    res.outer_updates = version
+    res.resumed_from_round = start_round
+    res.final_loss = res.round_losses[-1] if res.round_losses \
+        else float("nan")
+    res.steps_per_s = res.inner_steps_total / wall if wall > 0 else 0.0
+    res.sync_wire_bytes_per_round = wire_b
+    res.virtual_time_s = vclock
+    if vclock > 0:
+        res.virtual_tokens_per_s = (res.contributed_steps * tc.batch
+                                    * tc.seq_len / vclock)
+    res.fault_counts = dict(inj.counts)
+    if topology is not None or placement is not None:
+        res.comm_time_s_per_round = comm_round_s
+        res.sync_wan_bytes_per_round = wan_round
+        res.replica_regions = replica_regions
+        res.comm_time_s_per_step = comm_round_s / ls.inner_steps
+    return res
+
+
+def _round_dur_last(rep: _Replica, ks, r: int, step_times, plan) -> float:
+    """Duration of the round that just reported (round_idx was already
+    advanced when it was scheduled)."""
+    idx = rep.round_idx - 1
+    dur = ks[r] * step_times[r] * plan.slowdown(r)
+    return dur + plan.jitter_s(r, idx)

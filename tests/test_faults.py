@@ -1,0 +1,440 @@
+"""Fault tolerance: deterministic fault plans, bounded-staleness async
+local SGD (including the exact reduction to the sync loop), self-healing
+checkpoint restore, orchestrator/serve fault consumption, and the
+fault-event telemetry schema."""
+
+import json
+import shutil
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointSpec, HealReport, RestorePolicy,
+                              ShardChecksumError, ShardReadError, ckpt,
+                              heal_cost)
+from repro.configs.opt import opt_config
+from repro.core.faultinject import FaultInjector, FaultPlan, corrupt_file
+from repro.core.net import NetParams, Topology
+from repro.core.sched.orchestrator import Orchestrator, SimConfig, make_fleet
+from repro.models import params as P
+from repro.obs.validate import validate_chrome_trace, validate_metrics_jsonl
+from repro.optim import adamw
+from repro.train.local_sgd import LocalSGDConfig, train_local_sgd
+from repro.train.trainer import TrainerConfig
+
+L = 4
+
+
+def _cfg():
+    return opt_config("opt-125m").reduced(num_layers=L, d_model=32,
+                                          vocab_size=64)
+
+
+def _tc(steps=4, seed=0):
+    return TrainerConfig(steps=steps, batch=2, seq_len=16, log_every=0,
+                         seed=seed)
+
+
+def _ls(**kw):
+    base = dict(replicas=2, inner_steps=2, nominal_step_s=0.1)
+    base.update(kw)
+    return LocalSGDConfig(**base)
+
+
+# ---------------------------------------------------------------- fault plan
+
+def test_fault_plan_draws_are_stateless_and_replayable():
+    p = FaultPlan(seed=3, straggler_frac=0.5, crash_prob=0.3,
+                  link_flap_prob=0.4, corrupt_prob=0.2)
+    q = FaultPlan(seed=3, straggler_frac=0.5, crash_prob=0.3,
+                  link_flap_prob=0.4, corrupt_prob=0.2)
+    # identical plans agree draw-for-draw; draw order cannot matter
+    # because every draw is keyed by (seed, kind, entity, t)
+    for r in range(6):
+        assert p.slowdown(r) == q.slowdown(r)
+        for t in range(6):
+            assert p.crashes(r, t) == q.crashes(r, t)
+            assert p.jitter_s(r, t) == q.jitter_s(r, t)
+            assert p.corrupts(t, r, "h") == q.corrupts(t, r, "h")
+    # interleaving other consumers' draws perturbs nothing
+    before = p.slowdown(0)
+    p.crashes("serve-req-9", 4), p.corrupts(1, 2, "n3")
+    assert p.slowdown(0) == before
+    # a different seed is a different schedule
+    r = FaultPlan(seed=4, straggler_frac=0.5)
+    assert any(p.slowdown(i) != r.slowdown(i) for i in range(16))
+    assert not FaultPlan(seed=3).active and p.active
+
+
+def test_injector_emits_schema_and_rejects_unknown_kinds():
+    inj = FaultInjector(FaultPlan(seed=0, crash_prob=1.0))
+    inj.emit("crash", 3, ts_s=1.0, round=2)
+    inj.emit("crash", 3)
+    inj.emit("heal", "n1", shards=2)
+    assert inj.counts == {"crash": 2, "heal": 1}
+    assert inj.registry.counter("faults/crash").value == 2
+    with pytest.raises(ValueError):
+        inj.emit("meteor_strike", 0)
+    # pass-through to the plan
+    assert inj.crashes(0, 0) == inj.plan.crashes(0, 0)
+
+
+def test_corrupt_file_is_deterministic_and_header_preserving(tmp_path):
+    f = tmp_path / "x.npy"
+    arr = np.arange(256, dtype=np.float32)
+    np.save(f, arr)
+    orig = f.read_bytes()
+    corrupt_file(f, seed=9)
+    rot_a = f.read_bytes()
+    f.write_bytes(orig)
+    corrupt_file(f, seed=9)
+    assert f.read_bytes() == rot_a != orig
+    assert rot_a[:128] == orig[:128]          # .npy header still parses
+    back = np.load(f)                         # loads fine -- silent rot
+    assert not np.array_equal(back, arr)
+
+
+# ------------------------------------------------- async local SGD reduction
+
+def test_async_q_all_s0_bit_identical_to_sync():
+    """The property hypothesis drives below, pinned at the defaults."""
+    cfg, tc = _cfg(), _tc()
+    sync = train_local_sgd(cfg, tc, _ls())
+    asyn = train_local_sgd(cfg, tc, _ls(async_mode=True))
+    assert asyn.mode == "async" and sync.mode == "sync"
+    assert asyn.losses == sync.losses
+    assert asyn.round_losses == sync.round_losses
+    assert asyn.outer_updates == sync.outer_updates == sync.rounds
+
+
+def test_async_reduces_to_sync_property():
+    """hypothesis: for any (seed, replicas), quorum=all + staleness 0
+    makes the async engine bit-identical to the synchronous loop."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    cfg = _cfg()
+
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16 - 1), replicas=st.integers(1, 3))
+    def prop(seed, replicas):
+        tc = _tc(seed=seed)
+        sync = train_local_sgd(cfg, tc, _ls(replicas=replicas))
+        asyn = train_local_sgd(cfg, tc, _ls(replicas=replicas,
+                                            async_mode=True,
+                                            quorum=replicas,
+                                            staleness_bound=0))
+        assert asyn.losses == sync.losses
+        assert asyn.round_losses == sync.round_losses
+
+    prop()
+
+
+def test_async_fault_replay_is_bit_identical():
+    cfg, tc = _cfg(), _tc(steps=8)
+    plan = FaultPlan(seed=16, straggler_frac=0.5, crash_prob=0.4,
+                     link_flap_prob=0.3)
+    ls = _ls(replicas=3, async_mode=True, quorum=2, staleness_bound=1)
+    a = train_local_sgd(cfg, tc, ls, fault_plan=plan)
+    b = train_local_sgd(cfg, tc, ls, fault_plan=plan)
+    assert a.losses == b.losses
+    assert a.round_losses == b.round_losses
+    assert a.fault_counts == b.fault_counts
+    assert a.virtual_time_s == b.virtual_time_s
+    assert a.dropped_stale == b.dropped_stale
+    assert a.crashes == b.crashes and a.crashes >= 1   # seed 16 crashes
+    assert a.fault_counts.get("rejoin", 0) >= 1
+    assert a.resyncs >= 1
+
+
+def test_async_staleness_bound_drops_straggler_work():
+    """seed 0 @ frac 0.5 makes replicas 0/1 stragglers and 2 fast; with
+    quorum=1 and S=0 a slow replica's delta is always a version behind
+    when it lands -- dropped at the bound, replica re-synced."""
+    cfg, tc = _cfg(), _tc(steps=16)
+    plan = FaultPlan(seed=0, straggler_frac=0.5)
+    assert plan.is_straggler(0) and not plan.is_straggler(2)
+    res = train_local_sgd(cfg, tc, _ls(replicas=3, async_mode=True,
+                                       quorum=1, staleness_bound=0),
+                          fault_plan=plan)
+    assert res.dropped_stale >= 1
+    assert res.resyncs >= res.dropped_stale
+    assert res.fault_counts.get("drop_stale", 0) == res.dropped_stale
+    # dropped work ran but never merged
+    assert res.contributed_steps < res.inner_steps_total
+
+
+def test_async_beats_sync_clock_under_stragglers():
+    """Quorum gating stops the slowest device from stalling every round:
+    the modelled fleet clock yields more contributed tokens/s async."""
+    cfg, tc = _cfg(), _tc(steps=8)
+    plan = FaultPlan(seed=0, straggler_frac=0.5)     # 4-8x stragglers
+    sync = train_local_sgd(cfg, tc, _ls(replicas=3), fault_plan=plan)
+    asyn = train_local_sgd(cfg, tc, _ls(replicas=3, async_mode=True,
+                                        quorum=2, staleness_bound=2),
+                           fault_plan=plan)
+    assert sync.losses == train_local_sgd(cfg, tc, _ls(replicas=3)).losses, \
+        "sync trajectory must not depend on the fault plan"
+    assert asyn.virtual_tokens_per_s > sync.virtual_tokens_per_s
+
+
+def test_async_rejects_bad_knobs_and_monitor():
+    cfg, tc = _cfg(), _tc()
+    with pytest.raises(ValueError):
+        train_local_sgd(cfg, tc, _ls(async_mode=True, quorum=5))
+    with pytest.raises(ValueError):
+        train_local_sgd(cfg, tc, _ls(async_mode=True, staleness_bound=-1))
+    from repro.core.energy.devices import get_device
+    from repro.core.energy.monitor import ComponentModel, EnergyMonitor
+    mon = EnergyMonitor(ComponentModel.for_device(get_device("laptop-m2pro")))
+    with pytest.raises(ValueError):
+        train_local_sgd(cfg, tc, _ls(async_mode=True), monitor=mon)
+
+
+# ------------------------------------------------- self-healing checkpoints
+
+def _state(cfg, seed=0):
+    params = P.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw.init_opt_state(params, adamw.OptConfig())
+    return {"params": params, "opt": opt}
+
+
+def _assert_bitexact(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        if xa.dtype.kind == "V":
+            xa, ya = xa.view(np.uint16), ya.view(np.uint16)
+        np.testing.assert_array_equal(xa, ya)
+
+
+def test_checksums_catch_silent_corruption(tmp_path):
+    cfg = _cfg()
+    tree = _state(cfg)
+    ckpt.save(str(tmp_path), 3, tree)
+    files = sorted(p for p in (tmp_path / "step_00000003").iterdir()
+                   if p.suffix == ".npy")
+    corrupt_file(files[0], seed=1)
+    corrupt_file(files[1], seed=1)
+    assert len(ckpt.damaged_files(str(tmp_path), 3)) == 2
+    with pytest.raises(ShardReadError) as ei:
+        ckpt.restore(str(tmp_path), tree, step=3)
+    assert "2 shard file(s) unreadable" in str(ei.value)
+    # checksum mismatches are deterministic bit-rot: not retried
+    pol = RestorePolicy(retries=5)
+    with pytest.raises(ShardChecksumError):
+        ckpt._load_array(files[0], np.float32,
+                         crc=ckpt._read_manifest(
+                             tmp_path / "step_00000003")["checksums"]
+                         [files[0].name], policy=pol)
+
+
+def test_heal_refetches_corrupt_and_missing_shards(tmp_path):
+    """Corrupt two shard files and delete a third in the primary copy;
+    restore with a neighbour-holder source heals all three bit-exactly
+    and reports the fetched bytes per source."""
+    cfg = _cfg()
+    tree = _state(cfg)
+    primary, holder = tmp_path / "primary", tmp_path / "holder"
+    spec = CheckpointSpec(L, (0, 1, 2, L), replication=1)
+    ckpt.save_for_placement(str(primary), 5, tree, spec)
+    shutil.copytree(primary, holder)
+    files = sorted(p for p in (primary / "step_00000005").iterdir()
+                   if p.suffix == ".npy")
+    corrupt_file(files[0], seed=2)
+    corrupt_file(files[1], seed=2)
+    files[2].unlink()
+    rep = HealReport()
+    back = ckpt.restore(str(primary), tree, step=5,
+                        sources=[("n1", str(holder))], heal_report=rep)
+    _assert_bitexact(tree, back)
+    assert rep.ok and len(rep.healed) == 3 and not rep.unrecovered
+    assert rep.bytes_fetched > 0
+    assert rep.per_source_bytes == {"n1": rep.bytes_fetched}
+    reasons = {h["reason"] for h in rep.healed}
+    assert reasons == {"corrupt", "missing"}
+    # the primary is repaired in place: a plain restore now succeeds
+    _assert_bitexact(tree, ckpt.restore(str(primary), tree, step=5))
+
+
+def test_heal_reports_unrecovered_without_a_clean_source(tmp_path):
+    cfg = _cfg()
+    tree = _state(cfg)
+    ckpt.save(str(tmp_path / "a"), 1, tree)
+    files = sorted(p for p in (tmp_path / "a" / "step_00000001").iterdir()
+                   if p.suffix == ".npy")
+    corrupt_file(files[0], seed=3)
+    rep = ckpt.heal_step(str(tmp_path / "a"), 1,
+                         sources=[str(tmp_path / "nope")])
+    assert not rep.ok and rep.unrecovered and not rep.healed
+
+
+def test_heal_cost_prices_fetches_over_topology():
+    topo = Topology(params=NetParams(wan_bw_Bps=5e6))
+    from repro.core.energy.devices import LAPTOP_M2PRO
+    topo.add_device("a", "europe", LAPTOP_M2PRO)
+    topo.add_device("b", "europe", LAPTOP_M2PRO)
+    topo.add_device("c", "north_america", LAPTOP_M2PRO)
+    from repro.checkpoint.elastic import STORE
+    c = heal_cost(topo, [("a", "b", 1e6), ("a", "c", 2e6),
+                         (STORE, "b", 5e5)])
+    assert c.bytes_moved == pytest.approx(3.5e6)
+    assert c.wan_bytes == pytest.approx(2.5e6)   # cross-region + store
+    assert c.time_s > 0 and c.transfers == 3
+
+
+def test_restore_retry_aggregates_every_unreadable_shard(tmp_path):
+    cfg = _cfg()
+    tree = _state(cfg)
+    ckpt.save_for_placement(str(tmp_path), 2, tree,
+                            CheckpointSpec(L, (0, 2, L)))
+    step_dir = tmp_path / "step_00000002"
+    files = sorted(p for p in step_dir.iterdir() if p.suffix == ".npy")
+    for f in files[:3]:
+        corrupt_file(f, seed=4)
+    with pytest.raises(ShardReadError) as ei:
+        ckpt.restore(str(tmp_path), tree, step=2,
+                     policy=RestorePolicy(retries=1, backoff_s=0.0))
+    msg = str(ei.value)
+    assert "unreadable after 1 retries" in msg
+    assert "CRC32 mismatch" in msg
+    assert isinstance(ei.value, ckpt.IncompleteCheckpointError)
+
+
+# ------------------------------------------------------------- orchestrator
+
+def test_sim_replays_identically_under_fault_plan():
+    """Satellite contract: identical SimConfigs (seed + plan) replay
+    identical trajectories -- membership churn included."""
+    cfg = opt_config("opt-125m")
+    plan = FaultPlan(seed=0, straggler_frac=0.3, crash_prob=0.02,
+                     link_flap_prob=0.1, corrupt_prob=0.3)
+    sim = SimConfig(total_steps=60, seed=5, checkpoint_interval=20,
+                    fault_plan=plan)
+    fa = make_fleet({"laptop-m2pro": 4, "smartphone-sd888": 6}, seed=2)
+    fb = make_fleet({"laptop-m2pro": 4, "smartphone-sd888": 6}, seed=2)
+    a = Orchestrator(cfg, fa, sim).run()
+    b = Orchestrator(cfg, fb, sim).run()
+    assert a.wall_time_s == b.wall_time_s
+    assert a.energy_wh == b.energy_wh
+    assert a.membership_changes == b.membership_changes
+    assert a.fault_counts == b.fault_counts
+    # seed 0 exercises every path: stragglers stretch compute, crashes
+    # force churn, corrupt shard copies degrade recovery to other
+    # holders (the heal events)
+    assert a.crashes >= 1 and a.fault_counts.get("rejoin", 0) >= 1
+    assert a.corrupted_shard_copies >= 1
+    assert a.fault_counts.get("heal", 0) >= 1
+    assert a.steps_done == 60
+
+
+def test_sim_without_plan_matches_legacy_seeding():
+    """fault_plan=None must not perturb the churn streams: the named
+    substreams draw exactly what the old shared RNG schedule drew."""
+    cfg = opt_config("opt-125m")
+    fa = make_fleet({"laptop-m2pro": 4, "smartphone-sd888": 6}, seed=2)
+    fb = make_fleet({"laptop-m2pro": 4, "smartphone-sd888": 6}, seed=2)
+    a = Orchestrator(cfg, fa, SimConfig(total_steps=40, seed=5)).run()
+    b = Orchestrator(cfg, fb, SimConfig(total_steps=40, seed=5,
+                                        fault_plan=FaultPlan())).run()
+    assert a.wall_time_s == b.wall_time_s
+    assert a.membership_changes == b.membership_changes
+    assert b.fault_counts == {}
+
+
+# -------------------------------------------------------------------- serve
+
+def _serve_cfg():
+    from repro.configs import get_config
+    from conftest import tiny
+    return tiny(get_config("opt-125m"))
+
+
+def test_serve_ttft_deadline_fails_gracefully():
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    cfg = _serve_cfg()
+    params = P.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, EngineConfig(
+        max_slots=1, block_size=4, num_blocks=16, max_blocks_per_seq=8,
+        ttft_deadline_s=0.02))
+    eng.submit(Request(uid="x", prompt=[1, 2, 3], max_new=6))
+    for _ in range(4):                       # x admitted, producing tokens
+        eng.step()
+    eng.submit(Request(uid="y", prompt=[4, 5], max_new=4))
+    time.sleep(0.03)                         # y queued past its deadline
+    out = eng.run()
+    assert out["y"].failed and out["y"].fail_reason == "deadline"
+    assert out["y"].tokens == []
+    assert not out["x"].failed and len(out["x"].tokens) == 6
+    s = eng.stats()
+    assert s["deadline_failures"] == 1 and s["requests_failed"] == 1
+
+
+def test_serve_requeue_limit_bounds_injected_churn():
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    cfg = _serve_cfg()
+    params = P.init_params(cfg, jax.random.PRNGKey(0))
+    plan = FaultPlan(seed=1, crash_prob=0.6)
+    eng = ServeEngine(params, cfg, EngineConfig(
+        max_slots=2, block_size=4, num_blocks=24, max_blocks_per_seq=8,
+        max_requeues=2), fault_plan=plan)
+    out = eng.run([Request(uid="a", prompt=[1, 2, 3], max_new=8),
+                   Request(uid="b", prompt=[7, 8], max_new=8)])
+    failed = [c for c in out.values() if c.failed]
+    assert failed, "crash_prob=0.6 must trip the requeue bound"
+    assert all(c.fail_reason == "requeue_limit" for c in failed)
+    assert eng.injector.counts.get("crash", 0) >= 3
+    s = eng.stats()
+    assert s["requeue_limit_failures"] == len(failed)
+    # replay: the same plan produces the same failures
+    eng2 = ServeEngine(params, cfg, EngineConfig(
+        max_slots=2, block_size=4, num_blocks=24, max_blocks_per_seq=8,
+        max_requeues=2), fault_plan=plan)
+    out2 = eng2.run([Request(uid="a", prompt=[1, 2, 3], max_new=8),
+                     Request(uid="b", prompt=[7, 8], max_new=8)])
+    assert {u: (c.failed, tuple(c.tokens)) for u, c in out.items()} == \
+        {u: (c.failed, tuple(c.tokens)) for u, c in out2.items()}
+
+
+# -------------------------------------------------------- telemetry schema
+
+def test_validate_checks_fault_event_schema(tmp_path):
+    from repro.obs.trace import Tracer
+    tr = Tracer(enabled=True, process="test")
+    with tr.span("work", "test"):
+        pass
+    inj = FaultInjector(FaultPlan(seed=0, crash_prob=1.0))
+    inj.tracer = tr
+    inj.emit("crash", 7, ts_s=1.0, round=3)
+    inj.emit("heal", "n2", shards=2)
+    good = tmp_path / "trace.json"
+    tr.save_chrome_trace(str(good))
+    counts = validate_chrome_trace(str(good))
+    assert counts["fault"] == 2
+    # a fault-cat event without the schema fails validation
+    data = json.loads(good.read_text())
+    data["traceEvents"].append({"name": "oops", "cat": "fault", "ph": "i",
+                                "ts": 0, "pid": 1, "tid": 1, "args": {}})
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(data))
+    with pytest.raises(ValueError, match="fault"):
+        validate_chrome_trace(str(bad))
+    # raw jsonl event log: same schema check
+    lines = [
+        json.dumps({"name": "fault.crash", "cat": "fault", "ph": "i",
+                    "ts_us": 10, "args": {"entity": "7"}}),
+        json.dumps({"name": "step", "cat": "train", "ph": "X",
+                    "ts_us": 0, "dur_us": 5}),
+    ]
+    jl = tmp_path / "events.jsonl"
+    jl.write_text("\n".join(lines) + "\n")
+    jcounts = validate_metrics_jsonl(str(jl))
+    assert jcounts["fault"] == 1 and jcounts["event"] == 2
+    jl.write_text(json.dumps({"name": "fault.", "cat": "fault", "ph": "i",
+                              "ts_us": 0, "args": {"entity": "x"}}) + "\n")
+    with pytest.raises(ValueError, match="bad name"):
+        validate_metrics_jsonl(str(jl))
