@@ -1,18 +1,33 @@
-"""Serving benchmark: continuous batching + paged KV vs the dense path.
+"""Serving benchmark: the fast path (prefix sharing + chunked prefill +
+int8 KV) against its baselines, plus the original paged-vs-dense claims.
 
-Three claims gate the serving subsystem (writes ``BENCH_serve.json``):
+Seven claims gate the serving subsystem (writes ``BENCH_serve.json``,
+including the claim verdicts, so CI can re-validate the artifact with
+``repro.obs.validate``):
 
 1. **throughput** — the continuous-batching engine beats sequential
    ``greedy_generate`` (one dense-cache generation per request) on
-   aggregate tokens/s over a mixed-length request set.  Both paths are
-   warmed up first, so the window measures steady-state serving, not
-   compilation.
+   aggregate tokens/s over the mixed-prefix trace.
 2. **memory** — the paged cache's peak KV bytes stay strictly below the
-   dense fixed-length cache at equal batch (the dense layout must size
-   every slot to the worst-case sequence; pages only exist once written).
+   dense fixed-length cache at equal batch.
 3. **numerics** — the Pallas flash-decode kernel (interpret mode on CPU)
    matches the ``chunked.py`` flash twin's last causal row within fp32
    tolerance on causal / GQA / sliding-window cases.
+4. **fast path** — prefix sharing + chunked prefill reach >= 1.3x the
+   engine tokens/s of the round-1 engine (token-by-token teacher
+   forcing, no sharing) on a mixed-prefix trace — with **identical**
+   greedy outputs at matched dtypes.
+5. **int8 KV memory** — quantized pages + per-vector fp32 scales hold
+   peak KV bytes <= 0.55x the bf16 pool at batch 4 on the same trace.
+6. **int8 KV numerics** — flash-decode logits from the int8 cache stay
+   within 5e-2 of the fp cache.
+7. **tail latency** — under long-prompt arrival with pool pressure
+   (preemption + re-prefill), chunked prefill + prefix hits cut p99
+   inter-token latency vs token-by-token re-prefill.
+
+All engine pairs are warmed up (both compiled step shapes) and reset
+before the window, so the numbers measure steady-state serving, not
+compilation.
 
 Usage::
 
@@ -25,7 +40,7 @@ from __future__ import annotations
 import argparse
 import platform
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,17 +49,26 @@ import numpy as np
 from benchmarks.common import BenchResult, Claim, write_bench_json
 
 FP32_TOL = 5e-5
+INT8_LOGITS_TOL = 5e-2
 
 
-def _requests(cfg, n: int, max_prompt: int, max_new_hi: int):
+def _mixed_prefix_trace(cfg, n: int, *, n_sys: int = 3, sys_len: int = 16,
+                        tail_lo: int = 4, tail_hi: int = 12,
+                        max_new: int = 12, seed: int = 42):
+    """Shared-system-prompt workload: ``n_sys`` system prompts, each
+    request one of them (round-robin, so arrivals interleave across
+    prefixes) plus a unique tail — the serving pattern prefix caching is
+    built for."""
     from repro.serve.engine import Request
+    rng = np.random.RandomState(seed)
+    sys_prompts = [list(map(int, rng.randint(0, cfg.vocab_size, sys_len)))
+                   for _ in range(n_sys)]
     reqs = []
     for i in range(n):
-        L = 4 + (5 * i) % max(max_prompt - 3, 1)
-        m = 8 + (7 * i) % max(max_new_hi - 7, 1)
-        toks = np.random.RandomState(1000 + i).randint(0, cfg.vocab_size, L)
-        reqs.append(Request(uid=f"r{i}", prompt=list(map(int, toks)),
-                            max_new=m))
+        tail_len = tail_lo + (5 * i) % max(tail_hi - tail_lo, 1)
+        tail = list(map(int, rng.randint(0, cfg.vocab_size, tail_len)))
+        reqs.append(Request(uid=f"r{i}", prompt=sys_prompts[i % n_sys] + tail,
+                            max_new=max_new))
     return reqs
 
 
@@ -66,29 +90,37 @@ def _sequential_greedy(params, cfg, reqs, cache_len: int) -> Dict[str, float]:
     return {"tokens": tokens, "wall_s": wall, "tokens_per_s": tokens / wall}
 
 
-def _engine_run(params, cfg, reqs, *, slots: int, block: int,
-                cache_len: int) -> Dict[str, float]:
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
+def _make_engine(params, cfg, *, slots: int, block: int, cache_len: int,
+                 num_blocks: int = 0, **ecfg_kw):
+    from repro.serve.engine import EngineConfig, ServeEngine
     from repro.serve.paged_cache import blocks_for
     per_seq = blocks_for(cache_len, block)
     ecfg = EngineConfig(max_slots=slots, block_size=block,
-                        num_blocks=per_seq * slots + 2,
-                        max_blocks_per_seq=per_seq)
+                        num_blocks=num_blocks or per_seq * slots + 2,
+                        max_blocks_per_seq=per_seq, **ecfg_kw)
     eng = ServeEngine(params, cfg, ecfg)
-    eng.run([Request(uid="_warm", prompt=[1, 2, 3], max_new=2)])   # warmup
+    eng.warmup()             # both compiled step shapes + sampler
     eng.reset_stats()        # compile time/energy stays out of the window
+    return eng
 
-    eng.run(reqs)
+
+def _engine_run(eng, reqs) -> Tuple[Dict[str, float], Dict[str, List[int]]]:
+    out = eng.run(list(reqs))
     s = eng.stats()
-    assert len(eng.completions) == len(reqs), "engine dropped requests"
-    return {"tokens": int(s["tokens_generated"]), "wall_s": eng.wall_s,
-            "tokens_per_s": s["tokens_per_s"], "steps": int(s["steps"]),
-            "peak_cache_bytes": s["peak_cache_bytes"],
-            "pool_bytes": s["pool_bytes"],
-            "frag_tokens_peak": s["frag_tokens_peak"],
-            "utilization_peak": s["utilization_peak"],
-            "energy_j": s["energy_j"], "j_per_token": s["j_per_token"],
-            "carbon_g": s["carbon_g"]}
+    assert len(out) == len(reqs), "engine dropped requests"
+    row = {"tokens": int(s["tokens_generated"]), "wall_s": eng.wall_s,
+           "tokens_per_s": s["tokens_per_s"], "steps": int(s["steps"]),
+           "peak_cache_bytes": s["peak_cache_bytes"],
+           "pool_bytes": s["pool_bytes"],
+           "frag_tokens_peak": s["frag_tokens_peak"],
+           "utilization_peak": s["utilization_peak"],
+           "prefix_hit_rate": s["prefix_hit_rate"],
+           "prefix_hit_tokens": s["prefix_hit_tokens"],
+           "cow_forks": s["cow_forks_total"],
+           "kv_bytes_saved": s["kv_bytes_saved"],
+           "energy_j": s["energy_j"], "j_per_token": s["j_per_token"],
+           "carbon_g": s["carbon_g"]}
+    return row, {uid: c.tokens for uid, c in out.items()}
 
 
 def _dense_cache_bytes(cfg, batch: int, cache_len: int) -> int:
@@ -96,6 +128,62 @@ def _dense_cache_bytes(cfg, batch: int, cache_len: int) -> int:
     shapes = M.abstract_cache(cfg, batch, cache_len)
     return int(sum(np.prod(l.shape) * l.dtype.itemsize
                    for l in jax.tree.leaves(shapes)))
+
+
+def _int8_logits_error(params, cfg) -> float:
+    """Teacher-force through fp32 and int8 paged caches with the Pallas
+    flash-decode kernel (interpret off-TPU); max abs logits gap."""
+    from repro.models import model as M
+    from repro.serve.paged_cache import PagedKVCache
+    B, S, bs = 2, 9, 4
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                                cfg.vocab_size)
+    pools = {"fp": M.init_paged_cache(cfg, 12, bs, jnp.float32),
+             "q": M.init_paged_cache(cfg, 12, bs, jnp.int8)}
+    kv = PagedKVCache(num_blocks=12, block_size=bs, max_slots=B,
+                      max_blocks_per_seq=4)
+    for s in range(B):
+        kv.open_slot(s)
+    last = {}
+    for i in range(S):
+        for s in range(B):
+            assert kv.ensure_capacity(s)
+        bt = jnp.asarray(kv.device_tables())
+        sl = jnp.asarray(kv.seq_lens())
+        for name in pools:
+            last[name], pools[name] = M.decode_step_paged(
+                params, cfg, pools[name], prompt[:, i:i + 1], bt, sl,
+                attn_impl="pallas")
+        for s in range(B):
+            kv.commit_token(s)
+    return float(jnp.max(jnp.abs(last["q"] - last["fp"])))
+
+
+def _latency_scenario(params, cfg, *, chunk: int, sharing: bool
+                      ) -> Dict[str, float]:
+    """Long-prompt arrival under pool pressure: the pool holds ~2 of the
+    3 slots' worth, so decoding sequences get preempted and must
+    re-prefill their whole history.  Token-by-token re-prefill stalls
+    the stream for O(prompt) steps (the p99 inter-token blowup); chunked
+    re-prefill — usually a prefix-cache hit on top — compresses it."""
+    from repro.serve.engine import Request
+    rng = np.random.RandomState(5)
+    reqs = [Request(uid=f"L{i}",
+                    prompt=list(map(int, rng.randint(0, cfg.vocab_size,
+                                                     28 + 4 * (i % 3)))),
+                    max_new=10)
+            for i in range(6)]
+    cache_len = max(len(r.prompt) + r.max_new for r in reqs)
+    eng = _make_engine(params, cfg, slots=3, block=4, cache_len=cache_len,
+                       num_blocks=27, cache_dtype="float32",
+                       prefill_chunk=chunk, prefix_sharing=sharing)
+    _, _outs = _engine_run(eng, reqs)
+    s = eng.stats()
+    preempts = float(eng.metrics.counter("serve/preemptions").value)
+    assert preempts > 0, "latency scenario must force preemption"
+    return {"inter_token_p99_s": s.get("inter_token_p99_s", 0.0),
+            "inter_token_p50_s": s.get("inter_token_p50_s", 0.0),
+            "preemptions": preempts, "steps": s["steps"]}
 
 
 def _kernel_numerics() -> List[Dict[str, Any]]:
@@ -128,63 +216,116 @@ def _kernel_numerics() -> List[Dict[str, Any]]:
     return rows
 
 
-def bench(n_requests: int, max_prompt: int, max_new: int, slots: int
-          ) -> Dict[str, Any]:
+def bench(n_requests: int, max_new: int, slots: int,
+          prefill_chunk: int) -> Dict[str, Any]:
     from repro.configs import get_config
     from repro.models import params as P
 
     cfg = get_config("qwen2-7b-smoke")
     params = P.init_params(cfg, jax.random.PRNGKey(0))
-    reqs = _requests(cfg, n_requests, max_prompt, max_new)
+    reqs = _mixed_prefix_trace(cfg, n_requests, max_new=max_new)
     cache_len = max(len(r.prompt) + r.max_new for r in reqs)
 
     out: Dict[str, Any] = {
         "config": {"model": cfg.name, "n_requests": n_requests,
-                   "max_prompt": max_prompt, "max_new": max_new,
-                   "slots": slots, "cache_len": cache_len,
+                   "max_new": max_new, "slots": slots,
+                   "prefill_chunk": prefill_chunk, "cache_len": cache_len,
+                   "trace": "mixed_prefix (3 system prompts, round-robin)",
                    "backend": jax.default_backend(),
                    "platform": platform.platform()},
     }
     out["sequential_greedy"] = _sequential_greedy(params, cfg, reqs,
                                                   cache_len)
-    out["engine"] = _engine_run(params, cfg, reqs, slots=slots, block=8,
-                                cache_len=cache_len)
-    out["dense_cache_bytes_equal_batch"] = _dense_cache_bytes(
-        cfg, slots, cache_len)
+
+    # fast path vs the round-1 engine: same code, matched fp32 KV, greedy
+    # -> outputs must be IDENTICAL; only the schedule and block mapping
+    # differ.  (The round-1 engine is prefill_chunk=1 + sharing off.)
+    fast = _make_engine(params, cfg, slots=slots, block=8,
+                        cache_len=cache_len, cache_dtype="float32",
+                        prefill_chunk=prefill_chunk, prefix_sharing=True)
+    out["engine_fast"], toks_fast = _engine_run(fast, reqs)
+    base = _make_engine(params, cfg, slots=slots, block=8,
+                        cache_len=cache_len, cache_dtype="float32",
+                        prefill_chunk=1, prefix_sharing=False)
+    out["engine_round1"], toks_base = _engine_run(base, reqs)
+    mismatched = [u for u in toks_base if toks_base[u] != toks_fast[u]]
+    assert not mismatched, f"fast path changed greedy outputs: {mismatched}"
+    out["outputs_identical"] = True
+    out["speedup_fast_vs_round1"] = (
+        out["engine_fast"]["tokens_per_s"]
+        / out["engine_round1"]["tokens_per_s"])
     out["speedup_engine_vs_sequential"] = (
-        out["engine"]["tokens_per_s"]
+        out["engine_fast"]["tokens_per_s"]
         / out["sequential_greedy"]["tokens_per_s"])
+
+    # int8 KV at batch 4: peak bytes vs the bf16 pool, same trace
+    q8 = _make_engine(params, cfg, slots=4, block=8, cache_len=cache_len,
+                      cache_dtype="int8", prefill_chunk=prefill_chunk)
+    out["engine_int8_b4"], _ = _engine_run(q8, reqs)
+    bf = _make_engine(params, cfg, slots=4, block=8, cache_len=cache_len,
+                      cache_dtype="bfloat16", prefill_chunk=prefill_chunk)
+    out["engine_bf16_b4"], _ = _engine_run(bf, reqs)
+    out["int8_peak_kv_ratio"] = (out["engine_int8_b4"]["peak_cache_bytes"]
+                                 / out["engine_bf16_b4"]["peak_cache_bytes"])
+    out["int8_flash_decode_max_logits_err"] = _int8_logits_error(params, cfg)
+
+    # tail latency under preemption + re-prefill
+    out["latency_chunked"] = _latency_scenario(params, cfg,
+                                               chunk=prefill_chunk,
+                                               sharing=True)
+    out["latency_token_by_token"] = _latency_scenario(params, cfg, chunk=1,
+                                                      sharing=False)
+    out["p99_inter_token_ratio"] = (
+        out["latency_chunked"]["inter_token_p99_s"]
+        / max(out["latency_token_by_token"]["inter_token_p99_s"], 1e-12))
+
+    # memory claim at matched dtype: the bf16 engine vs the dense bf16
+    # cache (the fast/round-1 pair runs fp32 KV for exact output parity)
+    out["dense_cache_bytes_equal_batch"] = _dense_cache_bytes(
+        cfg, 4, cache_len)
     out["paged_over_dense_bytes"] = (
-        out["engine"]["peak_cache_bytes"]
+        out["engine_bf16_b4"]["peak_cache_bytes"]
         / out["dense_cache_bytes_equal_batch"])
     out["kernel_numerics"] = _kernel_numerics()
     return out
 
 
-def run(n_requests: int = 12, max_prompt: int = 20, max_new: int = 24,
-        slots: int = 4, out_path: str = "BENCH_serve.json") -> BenchResult:
-    data = bench(n_requests, max_prompt, max_new, slots)
-    write_bench_json(out_path, data)
+def run(n_requests: int = 12, max_new: int = 16, slots: int = 4,
+        prefill_chunk: int = 8,
+        out_path: str = "BENCH_serve.json") -> BenchResult:
+    data = bench(n_requests, max_new, slots, prefill_chunk)
 
     res = BenchResult(name="bench_serve")
-    res.rows.append({"variant": "sequential_greedy",
-                     **data["sequential_greedy"]})
-    res.rows.append({"variant": "engine",
-                     **{k: v for k, v in data["engine"].items()
-                        if k not in ("pool_bytes",)}})
+    for variant, key in (("sequential_greedy", "sequential_greedy"),
+                         ("engine_fast", "engine_fast"),
+                         ("engine_round1", "engine_round1"),
+                         ("engine_int8_b4", "engine_int8_b4")):
+        res.rows.append({"variant": variant,
+                         **{k: v for k, v in data[key].items()
+                            if k not in ("pool_bytes",)}})
     for r in data["kernel_numerics"]:
         res.rows.append({"variant": f"flash_decode/{r['case']}",
                          "max_abs_err": r["max_abs_err"]})
-    res.notes.append(f"wrote {out_path}")
     res.notes.append(
-        f"engine vs sequential greedy: "
-        f"{data['speedup_engine_vs_sequential']:.2f}x tokens/s; paged peak "
-        f"{data['engine']['peak_cache_bytes']/1e6:.2f} MB vs dense "
-        f"{data['dense_cache_bytes_equal_batch']/1e6:.2f} MB at batch "
-        f"{slots}")
+        f"fast path vs round-1 engine: "
+        f"{data['speedup_fast_vs_round1']:.2f}x tokens/s "
+        f"({data['engine_fast']['steps']} vs "
+        f"{data['engine_round1']['steps']} steps, prefix hit rate "
+        f"{100 * data['engine_fast']['prefix_hit_rate']:.0f}%, identical "
+        f"greedy outputs)")
+    res.notes.append(
+        f"int8 KV: {data['int8_peak_kv_ratio']:.3f}x peak bytes at batch "
+        f"4, flash-decode logits err "
+        f"{data['int8_flash_decode_max_logits_err']:.3g}")
+    res.notes.append(
+        f"p99 inter-token under preemption: "
+        f"{data['latency_chunked']['inter_token_p99_s'] * 1e3:.1f} ms "
+        f"chunked vs "
+        f"{data['latency_token_by_token']['inter_token_p99_s'] * 1e3:.1f} "
+        f"ms token-by-token")
     res.claims.append(Claim(
         text="continuous-batching engine beats sequential greedy_generate "
-             "on aggregate tokens/s (mixed-length requests)",
+             "on aggregate tokens/s (mixed-prefix trace)",
         value=data["speedup_engine_vs_sequential"], lo=1.05,
         hi=float("inf")))
     res.claims.append(Claim(
@@ -196,6 +337,31 @@ def run(n_requests: int = 12, max_prompt: int = 20, max_new: int = 24,
         text="flash-decode kernel matches chunked reference "
              "(fp32 max abs err, causal/GQA/sliding-window)",
         value=worst, lo=0.0, hi=FP32_TOL))
+    res.claims.append(Claim(
+        text="prefix sharing + chunked prefill >= 1.3x engine tokens/s vs "
+             "round-1 engine on the mixed-prefix trace (identical greedy "
+             "outputs, matched dtypes)",
+        value=data["speedup_fast_vs_round1"], lo=1.3, hi=float("inf")))
+    res.claims.append(Claim(
+        text="int8 KV blocks hold peak KV bytes <= 0.55x the bf16 pool at "
+             "batch 4",
+        value=data["int8_peak_kv_ratio"], lo=0.0, hi=0.55))
+    res.claims.append(Claim(
+        text="flash-decode logits from the int8 cache within 5e-2 of the "
+             "fp cache",
+        value=data["int8_flash_decode_max_logits_err"], lo=0.0,
+        hi=INT8_LOGITS_TOL))
+    res.claims.append(Claim(
+        text="chunked prefill (+prefix hits) cuts p99 inter-token latency "
+             "vs token-by-token under long-prompt arrival with preemption "
+             "(ratio)",
+        value=data["p99_inter_token_ratio"], lo=0.0, hi=0.9))
+
+    # embed the verdicts so repro.obs.validate can re-check the artifact
+    data["claims"] = [{"text": c.text, "value": c.value, "lo": c.lo,
+                       "hi": c.hi, "ok": c.ok} for c in res.claims]
+    write_bench_json(out_path, data)
+    res.notes.append(f"wrote {out_path}")
     return res
 
 
@@ -206,8 +372,7 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
-        res = run(n_requests=8, max_prompt=12, max_new=16, slots=4,
-                  out_path=args.out)
+        res = run(n_requests=8, max_new=12, slots=4, out_path=args.out)
     else:
         res = run(out_path=args.out)
     from benchmarks.common import print_result

@@ -1,7 +1,7 @@
 """Pallas TPU flash-decode kernel over a paged KV cache.
 
-Single-token decode attention for serving: each query row attends to its
-sequence's cached K/V, which live in fixed-size **pages** (see
+Decode/chunked-prefill attention for serving: each query row attends to
+its sequence's cached K/V, which live in fixed-size **pages** (see
 ``serve.paged_cache``) rather than one dense per-sequence buffer.
 
 * **Block-table gather** — K/V pages are selected inside the BlockSpec
@@ -21,12 +21,25 @@ sequence's cached K/V, which live in fixed-size **pages** (see
   outside the valid range (beyond ``seq_len`` or entirely left of the
   sliding window) are predicated out with the same live-block discipline
   as ``kernel.py::_block_live`` — dead pages do no MXU work.
+* **Chunked prefill** — q may carry ``C`` teacher-forced query rows per
+  sequence (``(B, C, H, D)``); row ``c`` sits at cache position
+  ``seq_lens - 1 + c`` and attends to ``seq_lens + c`` valid positions.
+  The engine scatters all C rows' K/V before calling attention, so
+  same-step causality is just the per-row length mask.  All rows of a
+  sequence share the page stream — one grid, ``C * group`` query rows
+  per program.
+* **int8 KV** — with ``k_scale``/``v_scale`` pools of shape ``(P, bs,
+  K)`` the pages hold int8 values quantized per (page slot, kv head)
+  vector (``kernels/quant8`` blockwise scheme, quant block = head_dim);
+  the kernel dequantizes in registers right after the page load, so HBM
+  traffic stays at the int8 byte count.
 
-``seq_lens`` counts **all** valid cache positions *including* the current
-token (the engine scatters the new K/V at position ``seq_len - 1`` before
-calling attention), so the query position is ``seq_lens - 1`` and causality
-degenerates to the length mask.  ``interpret=True`` runs the identical
-kernel logic on CPU (CI parity tests vs ``chunked.py``).
+``seq_lens`` counts **all** valid cache positions *including* the first
+query row's token (the engine scatters the new K/V at position
+``seq_len - 1`` before calling attention), so the first query position is
+``seq_lens - 1`` and causality degenerates to the length mask.
+``interpret=True`` runs the identical kernel logic on CPU (CI parity
+tests vs ``chunked.py``).
 """
 
 from __future__ import annotations
@@ -44,14 +57,18 @@ from repro.kernels.flash_attention.kernel import NEG_INF
 DEFAULT_PAGES_PER_SPLIT = 8
 
 
-def _page_live(page, block_size: int, seq_len, *, window: int):
-    """Does logical ``page`` hold any position the query may attend to?
+def _page_live(page, block_size: int, seq_len, *, window: int,
+               chunk: int = 1):
+    """Does logical ``page`` hold any position some query row may attend
+    to?
 
-    Mirrors ``kernel.py::_block_live`` for the decode case (q_len == 1 at
-    position ``seq_len - 1``): a page is dead when it starts past the valid
-    length, or — with a sliding window — when its last position is already
-    left of the window."""
-    live = page * block_size < seq_len
+    Mirrors ``kernel.py::_block_live`` for the decode case: row ``c`` of
+    the chunk attends to positions ``< seq_len + c``, so the page is dead
+    when it starts past the *last* row's valid length, or — with a
+    sliding window — when its last position is already left of the
+    *first* row's window (later rows' windows only extend further
+    right)."""
+    live = page * block_size < seq_len + (chunk - 1)
     if window > 0:
         live &= (page + 1) * block_size - 1 > seq_len - 1 - window
     return live
@@ -64,15 +81,24 @@ def _page_live(page, block_size: int, seq_len, *, window: int):
 def paged_attention_reference(q: jax.Array, k_pages: jax.Array,
                               v_pages: jax.Array, block_tables: jax.Array,
                               seq_lens: jax.Array, *, window: int = 0,
-                              scale: Optional[float] = None) -> jax.Array:
+                              scale: Optional[float] = None,
+                              k_scale: Optional[jax.Array] = None,
+                              v_scale: Optional[jax.Array] = None
+                              ) -> jax.Array:
     """Dense-gather oracle for the paged layout (fp32 softmax).
 
-    q: (B, H, D); k/v_pages: (P, bs, K, D*); block_tables: (B, NB) int32;
-    seq_lens: (B,) int32 valid positions incl. the current token.
-    Returns (B, H, Dv).  Rows with seq_len == 0 return garbage (masked
-    upstream) — padded engine slots are never read.
+    q: (B, H, D) or (B, C, H, D) teacher-forced chunk rows; k/v_pages:
+    (P, bs, K, D*); block_tables: (B, NB) int32; seq_lens: (B,) int32
+    valid positions incl. the first query row's token (row ``c`` of a
+    chunk attends to ``seq_lens + c`` positions).  ``k_scale``/``v_scale``
+    ((P, bs, K) fp32) dequantize int8 pages.  Returns q's shape with D ->
+    Dv.  Rows with seq_len == 0 return garbage (masked upstream) — padded
+    engine slots are never read.
     """
-    B, H, D = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, C, H, D = q.shape
     P, bs, K, _ = k_pages.shape
     Dv = v_pages.shape[-1]
     g = H // K
@@ -81,26 +107,36 @@ def paged_attention_reference(q: jax.Array, k_pages: jax.Array,
     T = block_tables.shape[1] * bs
     k = k_pages[block_tables].reshape(B, T, K, D).astype(jnp.float32)
     v = v_pages[block_tables].reshape(B, T, K, Dv).astype(jnp.float32)
-    qf = q.reshape(B, K, g, D).astype(jnp.float32)
-    s = jnp.einsum("bkgd,btkd->bkgt", qf, k) * scale
-    t = jnp.arange(T)[None, :]
-    ok = t < seq_lens[:, None]
+    if k_scale is not None:
+        k = k * k_scale[block_tables].reshape(B, T, K)[..., None]
+    if v_scale is not None:
+        v = v * v_scale[block_tables].reshape(B, T, K)[..., None]
+    qf = q.reshape(B, C, K, g, D).astype(jnp.float32)
+    s = jnp.einsum("bckgd,btkd->bckgt", qf, k) * scale
+    t = jnp.arange(T)[None, None, :]
+    valid = seq_lens[:, None, None] + jnp.arange(C)[None, :, None]
+    ok = t < valid                                       # (B, C, T)
     if window > 0:
-        ok &= t > (seq_lens[:, None] - 1) - window
-    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        ok &= t > (valid - 1) - window
+    s = jnp.where(ok[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgt,btkd->bkgd", p, v)
-    return out.reshape(B, H, Dv).astype(q.dtype)
+    out = jnp.einsum("bckgt,btkd->bckgd", p, v)
+    out = out.reshape(B, C, H, Dv).astype(q.dtype)
+    return out[:, 0] if squeeze else out
 
 
 # --------------------------------------------------------------------------- #
 # Pallas kernel
 # --------------------------------------------------------------------------- #
 
-def _flash_decode_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref,
-                         m_ref, l_ref, acc_ref, m_scr, l_scr, acc_scr, *,
+def _flash_decode_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, *rest,
                          scale: float, window: int, block_size: int,
-                         pages_per_split: int):
+                         pages_per_split: int, chunk: int, group: int,
+                         quantized: bool):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
+    m_ref, l_ref, acc_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     si = pl.program_id(2)
     j = pl.program_id(3)
@@ -113,24 +149,30 @@ def _flash_decode_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref,
 
     seq_len = sl_ref[b]
     page = si * pages_per_split + j
-    live = _page_live(page, block_size, seq_len, window=window)
+    live = _page_live(page, block_size, seq_len, window=window, chunk=chunk)
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)             # (g, D)
+        q = q_ref[0, 0].astype(jnp.float32)             # (C*g, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bs, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)       # (bs, Dv)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
 
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         t = page * block_size + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
-        ok = t < seq_len
+        # per-row valid length: row r belongs to chunk index r // group
+        valid = seq_len + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0) // group
+        ok = t < valid
         if window > 0:
-            ok &= t > seq_len - 1 - window
+            ok &= t > valid - 1 - window
         s = jnp.where(ok, s, NEG_INF)
 
-        m_prev = m_scr[...]                              # (g, 1)
+        m_prev = m_scr[...]                              # (C*g, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m_prev - m_new)
@@ -148,16 +190,20 @@ def _flash_decode_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref,
 
 def _decode_bkgd(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                  block_tables: jax.Array, seq_lens: jax.Array, window: int,
-                 scale: float, pages_per_split: int, interpret: bool
+                 scale: float, pages_per_split: int, interpret: bool,
+                 chunk: int, group: int,
+                 k_scale: Optional[jax.Array], v_scale: Optional[jax.Array]
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Runs the split-KV kernel.  q: (B, K, g, D).  Returns the per-split
-    partials (m, l, acc) of shapes (B,K,S,g) / (B,K,S,g) / (B,K,S,g,Dv)."""
-    B, K, g, D = q.shape
+    """Runs the split-KV kernel.  q: (B, K, C*g, D) with rows ordered
+    chunk-major.  Returns the per-split partials (m, l, acc) of shapes
+    (B,K,S,CG) / (B,K,S,CG) / (B,K,S,CG,Dv)."""
+    B, K, CG, D = q.shape
     bs = k_pages.shape[1]
     Dv = v_pages.shape[-1]
     nb = block_tables.shape[1]
     pps = min(pages_per_split, nb)
     num_splits = -(-nb // pps)
+    quantized = k_scale is not None
 
     def page_of(si, j, bt, b):
         # clamp overhang pages of the last split onto a valid table entry;
@@ -167,45 +213,58 @@ def _decode_bkgd(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     grid = (B, K, num_splits, pps)
     kernel = functools.partial(
         _flash_decode_kernel, scale=scale, window=window, block_size=bs,
-        pages_per_split=pps)
+        pages_per_split=pps, chunk=chunk, group=group, quantized=quantized)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, CG, D),
+                     lambda b, h, si, j, bt, sl: (b, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, D),
+                     lambda b, h, si, j, bt, sl:
+                     (page_of(si, j, bt, b), 0, h, 0)),
+        pl.BlockSpec((1, bs, 1, Dv),
+                     lambda b, h, si, j, bt, sl:
+                     (page_of(si, j, bt, b), 0, h, 0)),
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, si, j, bt, sl:
+                         (page_of(si, j, bt, b), 0, h)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, si, j, bt, sl:
+                         (page_of(si, j, bt, b), 0, h)),
+        ]
+        operands += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, D),
-                         lambda b, h, si, j, bt, sl: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, si, j, bt, sl:
-                         (page_of(si, j, bt, b), 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, Dv),
-                         lambda b, h, si, j, bt, sl:
-                         (page_of(si, j, bt, b), 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, 1, 1, g),
+            pl.BlockSpec((1, 1, 1, CG),
                          lambda b, h, si, j, bt, sl: (b, h, si, 0)),
-            pl.BlockSpec((1, 1, 1, g),
+            pl.BlockSpec((1, 1, 1, CG),
                          lambda b, h, si, j, bt, sl: (b, h, si, 0)),
-            pl.BlockSpec((1, 1, 1, g, Dv),
+            pl.BlockSpec((1, 1, 1, CG, Dv),
                          lambda b, h, si, j, bt, sl: (b, h, si, 0, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, Dv), jnp.float32),
+            pltpu.VMEM((CG, 1), jnp.float32),
+            pltpu.VMEM((CG, 1), jnp.float32),
+            pltpu.VMEM((CG, Dv), jnp.float32),
         ],
     )
     m, l, acc = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((B, K, num_splits, g), jnp.float32),
-            jax.ShapeDtypeStruct((B, K, num_splits, g), jnp.float32),
-            jax.ShapeDtypeStruct((B, K, num_splits, g, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, num_splits, CG), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, num_splits, CG), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, num_splits, CG, Dv), jnp.float32),
         ],
         interpret=interpret,
-    )(block_tables, seq_lens, q, k_pages, v_pages)
+    )(block_tables, seq_lens, *operands)
     return m, l, acc
 
 
@@ -216,11 +275,19 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                        block_tables: jax.Array, seq_lens: jax.Array, *,
                        window: int = 0, scale: Optional[float] = None,
                        pages_per_split: int = DEFAULT_PAGES_PER_SPLIT,
-                       interpret: Optional[bool] = None) -> jax.Array:
-    """Flash-decoding over paged KV.  q: (B, H, D); pages: (P, bs, K, D*);
-    block_tables: (B, NB) int32 page ids; seq_lens: (B,) int32 valid
-    positions including the current token.  Returns (B, H, Dv)."""
-    B, H, D = q.shape
+                       interpret: Optional[bool] = None,
+                       k_scale: Optional[jax.Array] = None,
+                       v_scale: Optional[jax.Array] = None) -> jax.Array:
+    """Flash-decoding over paged KV.  q: (B, H, D), or (B, C, H, D) for a
+    teacher-forced prefill chunk; pages: (P, bs, K, D*); block_tables:
+    (B, NB) int32 page ids; seq_lens: (B,) int32 valid positions including
+    the first query row's token (row ``c`` attends to ``seq_lens + c``).
+    ``k_scale``/``v_scale`` ((P, bs, K) fp32) dequantize int8 pages in
+    registers.  Returns q's shape with D -> Dv."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, C, H, D = q.shape
     K = k_pages.shape[2]
     Dv = v_pages.shape[-1]
     g = H // K
@@ -229,17 +296,22 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    qg = q.reshape(B, K, g, D)
+    # chunk-major rows: row c*g + gi is chunk index c of group lane gi,
+    # matching the kernel's `row // group` valid-length recovery
+    qg = q.reshape(B, C, K, g, D).transpose(0, 2, 1, 3, 4).reshape(
+        B, K, C * g, D)
     m, l, acc = _decode_bkgd(qg, k_pages, v_pages,
                              block_tables.astype(jnp.int32),
                              seq_lens.astype(jnp.int32),
                              window, float(scale), pages_per_split,
-                             interpret)
+                             interpret, C, g, k_scale, v_scale)
     # merge the split partials: standard flash-decoding logsumexp rescale.
     # all-dead splits emit (m=-inf, l=0, acc=0) and vanish here.
-    g_m = jnp.max(m, axis=2)                                    # (B,K,g)
-    alpha = jnp.exp(m - g_m[:, :, None, :])                     # (B,K,S,g)
-    l_tot = jnp.sum(l * alpha, axis=2)                          # (B,K,g)
-    acc_tot = jnp.sum(acc * alpha[..., None], axis=2)           # (B,K,g,Dv)
+    g_m = jnp.max(m, axis=2)                                    # (B,K,CG)
+    alpha = jnp.exp(m - g_m[:, :, None, :])                     # (B,K,S,CG)
+    l_tot = jnp.sum(l * alpha, axis=2)                          # (B,K,CG)
+    acc_tot = jnp.sum(acc * alpha[..., None], axis=2)           # (B,K,CG,Dv)
     out = acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
-    return out.reshape(B, H, Dv).astype(q.dtype)
+    out = out.reshape(B, K, C, g, Dv).transpose(0, 2, 1, 3, 4).reshape(
+        B, C, H, Dv).astype(q.dtype)
+    return out[:, 0] if squeeze else out

@@ -47,3 +47,25 @@ def dequantize(q: jax.Array, scale: jax.Array, shape: Tuple[int, ...],
     import numpy as np
     n = int(np.prod(shape))
     return flat[:n].reshape(shape)
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 for KV-cache vectors: quant block = the
+    trailing ``head_dim`` axis, one fp32 scale per (..., kv_head) vector —
+    the same amax/127 scheme as :func:`quantize` with ``block = D``, kept
+    shape-preserving so it can run inside the serve step's scatter (the
+    flat kernel wants padded (N,) layouts).
+
+    x: (..., D) -> (int8 (..., D), fp32 scales (...,)).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_kv`: (..., D) int8 + (...,) scales."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

@@ -31,6 +31,18 @@ def main() -> None:
                     choices=["gather", "pallas"],
                     help="paged decode attention: XLA gather or the Pallas "
                          "flash-decode kernel (interpret mode off-TPU)")
+    ap.add_argument("--kv-dtype", default="bfloat16",
+                    choices=["bfloat16", "float32", "int8"],
+                    help="paged KV pool dtype; int8 stores quantized pages "
+                         "with per-vector fp32 scales (~0.53x the bf16 "
+                         "bytes) and dequantizes inside the attention "
+                         "gather")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens fed per engine step, shared across "
+                         "prefilling slots (1 = token-by-token)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the prefix-cache index (every request "
+                         "recomputes its full prompt)")
     ap.add_argument("--legacy", action="store_true",
                     help="force the dense greedy_generate path")
     ap.add_argument("--trace-out", default=None,
@@ -92,7 +104,7 @@ def _mixed_requests(args, cfg, tag: str):
 
 
 def _run_engine(args, cfg, params, device) -> None:
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve.engine import EngineConfig, ServeEngine
     from repro.serve.paged_cache import blocks_for
 
     block = 16
@@ -100,10 +112,15 @@ def _run_engine(args, cfg, params, device) -> None:
     ecfg = EngineConfig(max_slots=min(args.batch, 8), block_size=block,
                         num_blocks=per_seq * min(args.batch, 8) + 2,
                         max_blocks_per_seq=per_seq,
-                        attn_impl=args.attn_impl)
+                        attn_impl=args.attn_impl,
+                        cache_dtype=args.kv_dtype,
+                        prefill_chunk=args.prefill_chunk,
+                        prefix_sharing=not args.no_prefix_sharing)
     engine = ServeEngine(params, cfg, ecfg, device=device)
-    # warmup: compile the step + sampler outside the timing window
-    engine.run([Request(uid="_warm", prompt=[1, 2, 3], max_new=2)])
+    # warmup compiles BOTH step shapes (C=1 decode + C=chunk mixed) and
+    # the sampler; reset_stats() then zeroes the EnergyMonitor so the
+    # reported J/token prices serving, not XLA compilation
+    engine.warmup()
     engine.reset_stats()
 
     engine.run(_mixed_requests(args, cfg, "r"))
@@ -127,6 +144,12 @@ def _run_engine(args, cfg, params, device) -> None:
           f"{s['pool_bytes']/1e6:.2f} MB pool "
           f"(peak frag {s['frag_tokens_peak']:.0f} tokens, "
           f"peak util {100*s['utilization_peak']:.0f}%)")
+    print(f"[serve] fast path: prefix hit rate "
+          f"{100*s['prefix_hit_rate']:.0f}% "
+          f"({int(s['prefix_hit_tokens'])} tokens), "
+          f"{int(s['cow_forks_total'])} CoW forks, "
+          f"{s['kv_bytes_saved']/1e6:.2f} MB KV saved "
+          f"(chunk={ecfg.prefill_chunk}, kv={ecfg.cache_dtype})")
     print(f"[serve] energy ({device.name}): {s['energy_j']:.2f} J "
           f"({s['j_per_token']:.3f} J/token, {s['carbon_g']:.4f} gCO2e)")
 

@@ -163,11 +163,21 @@ PAGED_SUBLAYERS = ("attn", "mlp", "moe")
 def init_paged_sublayer_cache(kind: str, cfg: ModelConfig, num_blocks: int,
                               block_size: int, dtype=jnp.bfloat16) -> PyTree:
     """Per-sublayer page pools.  Unlike the dense cache there is no batch
-    dim — sequences share the pool through their block tables."""
+    dim — sequences share the pool through their block tables.  With
+    ``dtype`` int8 the pools are quantized per (page slot, kv head)
+    vector and carry fp32 ``k_scale``/``v_scale`` pools alongside —
+    (head_dim + 4) / (2 * head_dim) of the bf16 KV bytes per block."""
     if kind == "attn":
         K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-        return {"k_pages": jnp.zeros((num_blocks, block_size, K, hd), dtype),
-                "v_pages": jnp.zeros((num_blocks, block_size, K, hd), dtype)}
+        dt = jnp.dtype(dtype)
+        pools = {"k_pages": jnp.zeros((num_blocks, block_size, K, hd), dt),
+                 "v_pages": jnp.zeros((num_blocks, block_size, K, hd), dt)}
+        if dt == jnp.int8:
+            pools["k_scale"] = jnp.ones((num_blocks, block_size, K),
+                                        jnp.float32)
+            pools["v_scale"] = jnp.ones((num_blocks, block_size, K),
+                                        jnp.float32)
+        return pools
     if kind in ("mlp", "moe"):
         return {}                                  # stateless
     raise NotImplementedError(
@@ -179,12 +189,11 @@ def _sublayer_decode_paged(kind: str, p: PyTree, x: jax.Array, cache: PyTree,
                            cfg: ModelConfig, ctx: Dict[str, Any]):
     if kind == "attn":
         from repro.models.layers import attn_decode_paged
-        y, kp, vp = attn_decode_paged(
-            p, x, cfg, k_pages=cache["k_pages"], v_pages=cache["v_pages"],
+        return attn_decode_paged(
+            p, x, cfg, cache=cache,
             block_tables=ctx["block_tables"], seq_lens=ctx["seq_lens"],
-            positions=ctx["positions"],
+            positions=ctx["positions"], num_feed=ctx.get("num_feed"),
             impl=ctx.get("attn_impl", "gather"))
-        return y, {"k_pages": kp, "v_pages": vp}
     if kind == "mlp":
         return mlp_forward(p, x, cfg), cache
     if kind == "moe":

@@ -270,48 +270,77 @@ def attn_decode(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, *,
 
 
 def attn_decode_paged(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, *,
-                      k_pages: jax.Array, v_pages: jax.Array,
+                      cache: Dict[str, jax.Array],
                       block_tables: jax.Array, seq_lens: jax.Array,
-                      positions: jax.Array, impl: str = "gather"):
-    """Single-token decode against a PAGED KV cache.  x: (B,1,d).
+                      positions: jax.Array, impl: str = "gather",
+                      num_feed: Optional[jax.Array] = None):
+    """Decode / chunked-prefill step against a PAGED KV cache.  x: (B,C,d)
+    — C teacher-forced rows per sequence (C == 1 is plain decode).
 
-    k/v_pages: (P, bs, K, D) shared block pools; block_tables: (B, NB)
-    int32 page ids; seq_lens: (B,) cache positions already written (the new
-    token lands at position ``seq_lens[b]``).  Inactive batch slots carry
-    ``seq_lens == 0`` and block tables full of the null page — their
-    scatter hits page 0 (never allocated) and their output is ignored.
+    ``cache`` holds the shared block pools: ``k_pages``/``v_pages`` of
+    shape (P, bs, K, D), plus ``k_scale``/``v_scale`` ((P, bs, K) fp32)
+    when the pools are int8 (per-vector quant via ``kernels.quant8``,
+    applied at append time here and inverted inside the attention
+    gather).  block_tables: (B, NB) int32 page ids; seq_lens: (B,) cache
+    positions already written (row ``c`` lands at ``seq_lens[b] + c``).
+    ``num_feed``: (B,) rows actually fed per sequence this step; rows
+    past it scatter to the null page and their output is ignored.
+    Inactive batch slots carry ``seq_lens == 0`` and block tables full of
+    the null page — their scatter hits page 0 (never allocated) and their
+    output is ignored.
 
-    Returns (y, new_k_pages, new_v_pages).
+    Returns (y, new_cache).
     """
     from repro.kernels.flash_attention.decode import (flash_decode_paged,
                                                      paged_attention_reference)
-    B = x.shape[0]
+    from repro.kernels.quant8.ops import quantize_kv
+    k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+    k_scale = cache.get("k_scale")
+    v_scale = cache.get("v_scale")
+    B, C, _ = x.shape
     bs = k_pages.shape[1]
+    nb = block_tables.shape[1]
     h = norm(p["norm"], x, cfg)
     q, k, v = _project_qkv(p, h, cfg)
     q = positional(q, positions, cfg)
     k = positional(k, positions, cfg)
-    # scatter the new K/V row into its page: block seq_len // bs, offset
-    # seq_len % bs.  Active slots own disjoint pages, so indices collide
-    # only on the null page (inactive slots) where any value is fine.
-    page_ids = jnp.take_along_axis(block_tables,
-                                   (seq_lens // bs)[:, None], axis=1)[:, 0]
-    offs = seq_lens % bs
-    k_pages = k_pages.at[page_ids, offs].set(k[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[page_ids, offs].set(v[:, 0].astype(v_pages.dtype))
-    valid = seq_lens + 1                       # incl. the token just written
-    window = cfg.sliding_window
-    if impl == "pallas":
-        out = flash_decode_paged(q[:, 0].astype(jnp.float32),
-                                 k_pages, v_pages, block_tables, valid,
-                                 window=window)
+    # scatter row c's K/V into its page: position seq_len + c -> block
+    # (seq_len + c) // bs, offset (seq_len + c) % bs.  Active slots own
+    # disjoint pages, so indices collide only on the null page (inactive
+    # slots / rows past num_feed) where any value is fine.
+    pos_idx = seq_lens[:, None] + jnp.arange(C, dtype=seq_lens.dtype)[None, :]
+    page_ids = jnp.take_along_axis(
+        block_tables, jnp.clip(pos_idx // bs, 0, nb - 1), axis=1)   # (B, C)
+    if num_feed is not None:
+        fed = jnp.arange(C)[None, :] < num_feed[:, None]
+        page_ids = jnp.where(fed, page_ids, 0)
+    offs = pos_idx % bs
+    if k_scale is not None:                    # int8 pools: quantize at append
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_pages = k_pages.at[page_ids, offs].set(kq)
+        v_pages = v_pages.at[page_ids, offs].set(vq)
+        k_scale = k_scale.at[page_ids, offs].set(ks)
+        v_scale = v_scale.at[page_ids, offs].set(vs)
     else:
-        out = paged_attention_reference(q[:, 0].astype(jnp.float32),
-                                        k_pages, v_pages, block_tables,
-                                        valid, window=window)
-    out = out[:, None].astype(x.dtype)         # (B, 1, H, Dv)
+        k_pages = k_pages.at[page_ids, offs].set(k.astype(k_pages.dtype))
+        v_pages = v_pages.at[page_ids, offs].set(v.astype(v_pages.dtype))
+    valid = seq_lens + 1                 # incl. the first row just written
+    window = cfg.sliding_window
+    qf = q.astype(jnp.float32)
+    qf = qf[:, 0] if C == 1 else qf            # (B,H,D) | (B,C,H,D)
+    attn = flash_decode_paged if impl == "pallas" \
+        else paged_attention_reference
+    out = attn(qf, k_pages, v_pages, block_tables, valid, window=window,
+               k_scale=k_scale, v_scale=v_scale)
+    if C == 1:
+        out = out[:, None]
+    out = out.astype(x.dtype)                  # (B, C, H, Dv)
     y = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
-    return y, k_pages, v_pages
+    new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+    if k_scale is not None:
+        new_cache.update(k_scale=k_scale, v_scale=v_scale)
+    return y, new_cache
 
 
 # --------------------------------------------------------------------------- #

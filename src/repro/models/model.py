@@ -300,29 +300,39 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 def decode_step_paged(params: PyTree, cfg: ModelConfig, cache: PyTree,
                       tokens: jax.Array, block_tables: jax.Array,
-                      seq_lens: jax.Array, *, attn_impl: str = "gather"
+                      seq_lens: jax.Array, *, attn_impl: str = "gather",
+                      num_feed: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, PyTree]:
-    """One decode step over a paged KV cache with PER-SEQUENCE positions.
+    """One decode / chunked-prefill step over a paged KV cache with
+    PER-SEQUENCE positions.
 
-    tokens: (B, 1) int32; block_tables: (B, NB) int32 page ids; seq_lens:
-    (B,) int32 cache positions already written — the new token is written
-    at position ``seq_lens[b]`` and attends to ``seq_lens[b] + 1`` valid
-    positions.  Unlike :func:`decode_step` there is no shared scalar
+    tokens: (B, C) int32 teacher-forced rows (C == 1 is plain decode);
+    block_tables: (B, NB) int32 page ids; seq_lens: (B,) int32 cache
+    positions already written — row ``c`` is written at position
+    ``seq_lens[b] + c`` and attends to ``seq_lens[b] + c + 1`` valid
+    positions (all C rows scatter before attention, so same-step
+    causality is the per-row length mask).  ``num_feed``: (B,) rows
+    actually fed per sequence; rows past it write to the null page and
+    the returned logits come from row ``num_feed - 1`` (row ``C - 1``
+    when omitted).  Unlike :func:`decode_step` there is no shared scalar
     ``index``: every sequence sits at its own offset, which is what
     continuous batching schedules.  Returns (logits (B, vocab), new cache).
     """
-    B = tokens.shape[0]
+    B, C = tokens.shape
     x = embed_tokens(params, cfg, tokens)
+    pos_bc = seq_lens[:, None].astype(jnp.int32) \
+        + jnp.arange(C, dtype=jnp.int32)[None, :]            # (B, C)
     if "pos" in params["embed"]:
         pos_tab = params["embed"]["pos"]
-        idx = jnp.clip(seq_lens, 0, pos_tab.shape[0] - 1)
-        x = x + jnp.take(pos_tab, idx, axis=0).astype(x.dtype)[:, None, :]
-    positions = seq_lens[:, None].astype(jnp.int32)          # (B, 1)
+        idx = jnp.clip(pos_bc, 0, pos_tab.shape[0] - 1)
+        x = x + jnp.take(pos_tab, idx, axis=0).astype(x.dtype)
+    positions = pos_bc
     if cfg.pos_embedding == "mrope":
-        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+        positions = jnp.broadcast_to(positions[None], (3, B, C))
     ctx: Dict[str, Any] = {"positions": positions,
                            "block_tables": block_tables,
                            "seq_lens": seq_lens,
+                           "num_feed": num_feed,
                            "attn_impl": attn_impl}
     new_cache: Dict[str, Any] = {}
     for gi, g in enumerate(P.decoder_groups(cfg)):
@@ -330,7 +340,11 @@ def decode_step_paged(params: PyTree, cfg: ModelConfig, cache: PyTree,
             params["decoder"][f"g{gi}"], g, x, cache[f"g{gi}"], cfg, ctx)
     h = norm(params["final_norm"], x, cfg)
     logits = lm_logits(params, cfg, h)
-    return logits[:, 0, :], new_cache
+    if num_feed is None:
+        return logits[:, C - 1, :], new_cache
+    last = jnp.clip(num_feed - 1, 0, C - 1).astype(jnp.int32)
+    return jnp.take_along_axis(
+        logits, last[:, None, None], axis=1)[:, 0, :], new_cache
 
 
 def decode_step(params: PyTree, cfg: ModelConfig, cache: PyTree,

@@ -122,9 +122,50 @@ def validate_metrics_jsonl(path: str) -> Dict[str, int]:
     return counts
 
 
+_BENCH_META_KEYS = ("commit", "timestamp_utc", "jax_version", "backend")
+
+
+def validate_bench_json(path: str) -> Dict[str, int]:
+    """Schema check for ``BENCH_*.json`` artifacts (what
+    ``benchmarks.common.write_bench_json`` emits): a provenance ``meta``
+    stamp (commit, UTC timestamp, jax version, backend) plus — when the
+    benchmark embeds its acceptance gates — a non-empty ``claims`` list
+    whose entries carry text/value/lo/hi and all hold (``ok``)."""
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        raise ValueError(f"{path}: bench artifact is not a JSON object")
+    meta = data.get("meta")
+    if not isinstance(meta, dict):
+        raise ValueError(f"{path}: missing provenance 'meta' object")
+    for key in _BENCH_META_KEYS:
+        if not meta.get(key):
+            raise ValueError(f"{path}: meta missing/empty {key!r}")
+    counts = {"meta": 1}
+    if "claims" in data:
+        claims = data["claims"]
+        if not isinstance(claims, list) or not claims:
+            raise ValueError(f"{path}: 'claims' empty or not a list")
+        for i, c in enumerate(claims):
+            for key in ("text", "value", "lo", "hi", "ok"):
+                if key not in c:
+                    raise ValueError(f"{path}: claim {i} missing {key!r}")
+            if not (c["lo"] <= c["value"] <= c["hi"]) or not c["ok"]:
+                raise ValueError(f"{path}: claim {i} FAILED: "
+                                 f"{c['text']!r} derived {c['value']:.4g} "
+                                 f"(accept [{c['lo']:.4g}, {c['hi']:.4g}])")
+        counts["claim"] = len(claims)
+    return counts
+
+
 def validate(path: str) -> Dict[str, int]:
     if path.endswith(".jsonl"):
         return validate_metrics_jsonl(path)
+    with open(path) as f:
+        head = json.load(f)
+    if isinstance(head, dict) and "traceEvents" not in head \
+            and "meta" in head:
+        return validate_bench_json(path)
     return validate_chrome_trace(path)
 
 

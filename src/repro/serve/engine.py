@@ -2,18 +2,27 @@
 
 Iteration-level (Orca-style) scheduling: every engine step runs ONE jitted
 ``decode_step_paged`` over a fixed number of batch slots; each slot feeds
-either its next prompt token (prefill, teacher-forced) or its last sampled
-token (decode).  Prefill and decode therefore interleave freely inside a
-step, new requests are admitted the moment a slot and enough KV blocks are
-free, finished sequences are evicted (their blocks return to the pool) at
-the step boundary, and the compiled step function never changes shape —
-one compile for the whole serving session.
+either a **chunk** of its remaining prompt (prefill, teacher-forced, up to
+``prefill_chunk`` tokens shared between prefilling slots per step) or its
+last sampled token (decode).  Prefill and decode therefore interleave
+freely inside a step — a long admission costs decoding slots one chunked
+step, not one step per prompt token — new requests are admitted the
+moment a slot and enough KV blocks are free, finished sequences are
+evicted (their blocks return to the pool) at the step boundary, and the
+compiled step functions never change shape: exactly two compiles (the
+C=1 decode-only step and the C=chunk mixed step) cover the whole serving
+session.
 
-Memory is managed by ``serve.paged_cache``: admission requires blocks for
-the full prompt plus one lookahead block; decode allocates incrementally,
-and on pool exhaustion the youngest sequence is preempted (its blocks are
-freed and it re-queues with its generated tokens folded into the prompt —
-vLLM's recompute preemption).
+Memory is managed by ``serve.paged_cache``: admission matches the
+longest cached prefix (shared system prompts map read-only into the new
+sequence's block table, skipping their recompute entirely) and requires
+free blocks only for the unshared remainder plus one lookahead; decode
+allocates incrementally, copy-on-write forks queued by the cache are
+executed as device page copies before the next step, and on pool
+exhaustion the youngest sequence is preempted (its blocks are freed —
+refcounts only, shared blocks survive — and it re-queues with its
+generated tokens folded into the prompt — vLLM's recompute preemption;
+its registered blocks typically make the re-prefill a cache hit).
 
 Every step is priced through the component energy model
 (``core.energy.monitor``) exactly as the trainers do, and the run summary
@@ -60,9 +69,11 @@ PyTree = Any
 class _ReqTelemetry:
     """Host-side lifecycle clock for one request: survives preemption and
     requeue (TTFT is measured submit→first *ever* sampled token; the
-    end-to-end tokens/s denominator is submit→finish)."""
+    end-to-end tokens/s denominator is submit→finish; inter-token gaps
+    span preemptions too, which is exactly when they blow up)."""
     submit_s: float
     first_token_s: float = -1.0
+    last_token_s: float = -1.0
     phase: Any = None                 # open lifecycle span handle
     phase_name: str = ""
 
@@ -83,7 +94,12 @@ class EngineConfig:
     num_blocks: int = 128             # pool size (block 0 is the null page)
     max_blocks_per_seq: int = 32
     attn_impl: str = "gather"         # gather (XLA) | pallas (flash-decode)
-    cache_dtype: str = "bfloat16"
+    cache_dtype: str = "bfloat16"     # bfloat16 | float32 | int8 (quantized
+                                      # pages + per-vector fp32 scales)
+    prefill_chunk: int = 8            # prompt tokens fed per step (shared
+                                      # across prefilling slots; 1 =
+                                      # token-by-token teacher forcing)
+    prefix_sharing: bool = True       # cache + reuse prompt-prefix blocks
     seed: int = 0
     ttft_deadline_s: float = 0.0      # fail queued requests whose wait
                                       # exceeds this (0 = no deadline)
@@ -105,7 +121,8 @@ class Completion:
 @dataclass
 class _Slot:
     req: Request
-    fed: int = 0                      # tokens fed (prompt + sampled)
+    fed: int = 0                      # tokens fed (prompt + sampled;
+                                      # prefix-cache hits count as fed)
     generated: List[int] = field(default_factory=list)
     preemptions: int = 0
 
@@ -114,6 +131,11 @@ class _Slot:
         if self.fed < len(self.req.prompt):
             return self.req.prompt[self.fed]
         return self.generated[self.fed - len(self.req.prompt)]
+
+    def next_tokens(self, n: int) -> List[int]:
+        pl = len(self.req.prompt)
+        return [self.req.prompt[j] if j < pl else self.generated[j - pl]
+                for j in range(self.fed, self.fed + n)]
 
 
 class ServeEngine:
@@ -138,7 +160,8 @@ class ServeEngine:
         self.kv = PagedKVCache(num_blocks=ecfg.num_blocks,
                                block_size=ecfg.block_size,
                                max_slots=ecfg.max_slots,
-                               max_blocks_per_seq=ecfg.max_blocks_per_seq)
+                               max_blocks_per_seq=ecfg.max_blocks_per_seq,
+                               prefix_sharing=ecfg.prefix_sharing)
         self._slots: List[Optional[_Slot]] = [None] * ecfg.max_slots
         self._waiting: Deque[Request] = deque()
         self._preempt_counts: Dict[str, int] = {}
@@ -163,6 +186,7 @@ class ServeEngine:
         # the obs timeline with the validated fault schema
         self.injector = FaultInjector(fault_plan, registry=self.metrics)
 
+        from repro.models import params as MP
         from repro.train.trainer import donation_supported
         donate = (1,) if donation_supported() else ()
         impl = ecfg.attn_impl
@@ -170,11 +194,43 @@ class ServeEngine:
             lambda p, c, t, bt, sl: M.decode_step_paged(
                 p, cfg, c, t, bt, sl, attn_impl=impl),
             donate_argnums=donate)
+        # second (and last) compiled shape: the C=prefill_chunk mixed step
+        self._chunk_fn = jax.jit(
+            lambda p, c, t, nf, bt, sl: M.decode_step_paged(
+                p, cfg, c, t, bt, sl, num_feed=nf, attn_impl=impl),
+            donate_argnums=donate)
+
+        # copy-on-write page copy: every pool leaf is indexed by page on
+        # axis 0 (scan-stacked groups carry a leading depth axis instead)
+        groups = MP.decoder_groups(cfg)
+        depths = [g.depth for g in groups]
+
+        def _copy_pages(cache, src, dst):
+            out = {}
+            for gi, d in enumerate(depths):
+                unit = cache[f"g{gi}"]
+                if d > 1:
+                    out[f"g{gi}"] = jax.tree.map(
+                        lambda l: l.at[:, dst].set(l[:, src]), unit)
+                else:
+                    out[f"g{gi}"] = jax.tree.map(
+                        lambda l: l.at[dst].set(l[src]), unit)
+            return out
+
+        self._copy_fn = jax.jit(
+            _copy_pages, donate_argnums=(0,) if donate else ())
 
         # per-block KV bytes across all layers (for peak-memory stats)
         leaves = jax.tree.leaves(self.pages)
         self.pool_bytes = int(sum(l.size * l.dtype.itemsize for l in leaves))
         self.bytes_per_block = self.pool_bytes / ecfg.num_blocks
+        # what a bf16 pool of the same geometry would weigh per block —
+        # the int8 savings feeding the kv-bytes-saved gauge
+        n_attn = sum(g.depth * sum(1 for k in g.sublayers if k == "attn")
+                     for g in groups)
+        fp_bpb = (n_attn * 2 * ecfg.block_size * cfg.num_kv_heads
+                  * cfg.resolved_head_dim * 2)
+        self._quant_saved_per_block = max(0.0, fp_bpb - self.bytes_per_block)
 
     # ----------------------------------------------------------- telemetry
     def _phase_begin(self, uid: str, name: str, **attrs) -> None:
@@ -210,13 +266,21 @@ class ServeEngine:
     def _admit(self) -> None:
         free = self.kv.free_slots()
         while free and self._waiting \
-                and self.kv.can_admit(len(self._waiting[0].prompt)):
+                and self.kv.can_admit(list(self._waiting[0].prompt)):
             req = self._waiting.popleft()
             slot = free.pop(0)
-            self.kv.open_slot(slot)
-            self._slots[slot] = _Slot(req)
+            # longest cached prefix maps in read-only; those positions are
+            # already "fed" — their KV recompute is skipped entirely
+            cached = self.kv.open_slot(slot, req.prompt)
+            s = _Slot(req)
+            s.fed = cached
+            self._slots[slot] = s
+            self.metrics.counter("serve/prompt_tokens").inc(len(req.prompt))
+            if cached:
+                self.metrics.counter("serve/prefix_hit_tokens").inc(cached)
             self._phase_end(req.uid, "admitted")
-            self._phase_begin(req.uid, "prefill", slot=slot)
+            self._phase_begin(req.uid, "prefill", slot=slot,
+                              cached_tokens=cached)
 
     def _fail_request(self, uid: str, prompt: List[int],
                       generated: List[int], reason: str, **attrs) -> None:
@@ -307,15 +371,34 @@ class ServeEngine:
                                    slot=i)
                 self._preempt_slot(i, injected=True)
 
-    def _ensure_capacity(self) -> None:
-        """Give every active slot a page for this step's token, preempting
-        the least-progressed sequence on pool exhaustion."""
+    def _plan_feeds(self) -> Dict[int, int]:
+        """Per-slot token counts for this step: decode slots always feed
+        one token; prefilling slots split the ``prefill_chunk`` budget
+        (each gets at least one token, so nothing starves when many
+        prefill at once).  Reserves KV capacity — including copy-on-write
+        headroom — preempting the least-progressed sequence on pool
+        exhaustion."""
+        budget = max(1, self.ecfg.prefill_chunk)
+        feeds: Dict[int, int] = {}
         for i in range(self.ecfg.max_slots):
+            s = self._slots[i]
+            if s is None:
+                continue
+            remaining = len(s.req.prompt) - s.fed
+            if remaining <= 0:
+                feeds[i] = 1                              # decoding
+            else:
+                take = min(remaining, max(1, budget))
+                feeds[i] = take
+                budget -= take
+        for i in list(feeds):
             while self._slots[i] is not None \
-                    and not self.kv.ensure_capacity(i):
+                    and not self.kv.ensure_capacity(i, feeds[i]):
                 if not self._preempt_youngest():
                     raise MemoryError("paged pool exhausted with no "
                                       "preemptable sequence")
+        return {i: c for i, c in feeds.items()
+                if self._slots[i] is not None}
 
     # ------------------------------------------------------------------ step
     def step(self) -> int:
@@ -328,30 +411,47 @@ class ServeEngine:
         self._expire_deadlines()
         self._inject_preemptions()
         self._admit()
-        active = [i for i, s in enumerate(self._slots) if s is not None]
-        if not active:
+        if not any(s is not None for s in self._slots):
             return 0
-        self._ensure_capacity()
-        active = [i for i, s in enumerate(self._slots) if s is not None]
-        if not active:
+        feeds = self._plan_feeds()
+        if not feeds:
             return 0
-        sp.set(active=len(active))
+        sp.set(active=len(feeds))
 
         t0 = time.perf_counter()
+        # drain queued copy-on-write forks as device page copies BEFORE
+        # the step touches the pool (the forked sequence writes into its
+        # private copy this very step)
+        copies = self.kv.take_pending_copies()
+        if copies:
+            self.metrics.counter("serve/cow_forks").inc(len(copies))
+            for src, dst in copies:
+                self.pages = self._copy_fn(self.pages, jnp.int32(src),
+                                           jnp.int32(dst))
         n = self.ecfg.max_slots
-        tokens = np.zeros((n, 1), np.int32)
+        C = self.ecfg.prefill_chunk if max(feeds.values()) > 1 else 1
+        tokens = np.zeros((n, C), np.int32)
+        nfeed = np.zeros((n,), np.int32)
         temp = np.zeros((n,), np.float32)
         topk = np.zeros((n,), np.int32)
-        for i in active:
+        fed_tokens: Dict[int, List[int]] = {}
+        for i, cnt in feeds.items():
             s = self._slots[i]
-            tokens[i, 0] = s.next_token
+            fed_tokens[i] = s.next_tokens(cnt)
+            tokens[i, :cnt] = fed_tokens[i]
+            nfeed[i] = cnt
             temp[i] = s.req.sampling.temperature
             topk[i] = s.req.sampling.top_k
         bt = jnp.asarray(self.kv.device_tables())
         sl = jnp.asarray(self.kv.seq_lens())
 
-        logits, self.pages = self._step_fn(self.params, self.pages,
-                                           jnp.asarray(tokens), bt, sl)
+        if C == 1:
+            logits, self.pages = self._step_fn(self.params, self.pages,
+                                               jnp.asarray(tokens), bt, sl)
+        else:
+            logits, self.pages = self._chunk_fn(self.params, self.pages,
+                                                jnp.asarray(tokens),
+                                                jnp.asarray(nfeed), bt, sl)
         self._key, sub = jax.random.split(self._key)
         sampled = np.asarray(sample_tokens(logits.astype(jnp.float32), sub,
                                            jnp.asarray(temp),
@@ -359,13 +459,17 @@ class ServeEngine:
 
         committed = 0
         flops = hbm = 0.0
-        for i in active:
+        now = self._tracer.now_s()
+        for i, cnt in feeds.items():
             s = self._slots[i]
-            self.kv.commit_token(i)
+            for tok in fed_tokens[i]:
+                self.kv.commit_token(i, tok)
             cache_len = self.kv.table(i).num_tokens
-            flops += F.decode_flops(self.cfg, 1, cache_len)
+            for c in range(cnt):
+                flops += F.decode_flops(self.cfg, 1,
+                                        cache_len - cnt + 1 + c)
             hbm += F.kv_cache_bytes(self.cfg, 1, cache_len)
-            s.fed += 1
+            s.fed += cnt
             if s.fed == len(s.req.prompt):
                 # first sampled token for this (possibly merged) prompt:
                 # prefill is over, the decode phase starts now
@@ -383,6 +487,16 @@ class ServeEngine:
                 s.generated.append(tok)
                 self.tokens_generated += 1
                 committed += 1
+                rt = self._rt.get(s.req.uid)
+                if rt is not None:
+                    # inter-token gap, surviving preemption: the p99 here
+                    # is what chunked prefill is buying down
+                    if rt.last_token_s >= 0:
+                        self.metrics.histogram(
+                            "serve/inter_token_s",
+                            lo=1e-7, hi=3600.0).observe(
+                                max(now - rt.last_token_s, 1e-7))
+                    rt.last_token_s = now
                 done = (len(s.generated) >= s.req.max_new
                         or (s.req.eos_id >= 0 and tok == s.req.eos_id))
                 if done:
@@ -399,6 +513,13 @@ class ServeEngine:
         self._frag_tokens_peak = max(self._frag_tokens_peak,
                                      st["frag_tokens"])
         self._util_peak = max(self._util_peak, st["utilization"])
+        # bytes the fast path is NOT spending: prefix-shared blocks that
+        # multiple sequences map (held minus physically allocated) plus
+        # the int8-vs-bf16 delta on every block actually in use
+        saved = (st.get("shared_saved_blocks", 0.0) * self.bytes_per_block
+                 + self._quant_saved_per_block
+                 * self.kv.allocator.blocks_in_use)
+        self.metrics.gauge("serve/kv_bytes_saved").set_max(saved)
         self.metrics.gauge("serve/kv_utilization_peak").set_max(
             st["utilization"])
         self.metrics.gauge("serve/kv_frag_tokens_peak").set_max(
@@ -439,6 +560,22 @@ class ServeEngine:
     @property
     def busy(self) -> bool:
         return bool(self._waiting) or any(s is not None for s in self._slots)
+
+    def warmup(self) -> None:
+        """Compile both step shapes (the C=1 decode step and the
+        C=prefill_chunk mixed step) plus the sampler by running one
+        throwaway request end to end, then discard its artifacts.  Call
+        ``reset_stats()`` afterwards so compile time and energy stay out
+        of the measured window (J/token especially — XLA compilation
+        burns host joules that have nothing to do with serving)."""
+        plen = max(2, self.ecfg.prefill_chunk + 1)   # forces the chunk fn
+        tok = self.cfg.vocab_size - 1
+        self.submit(Request(uid="_warmup", prompt=[tok] * plen, max_new=2))
+        while self.busy:
+            self.step()
+        self.completions.pop("_warmup", None)
+        self._rt.pop("_warmup", None)
+        self._orig_prompts.pop("_warmup", None)
 
     def reset_stats(self) -> None:
         """Start a fresh measurement window (call after a warmup run so
@@ -500,10 +637,24 @@ class ServeEngine:
             self.metrics.counter("serve/failed_requeue_limit").value)
         out["requests_failed"] = (out["deadline_failures"]
                                   + out["requeue_limit_failures"])
+        # prefix-cache effectiveness over the measurement window
+        hit = self.metrics.counter("serve/prefix_hit_tokens").value
+        seen = self.metrics.counter("serve/prompt_tokens").value
+        out["prefix_hit_tokens"] = float(hit)
+        out["prefix_hit_rate"] = hit / max(seen, 1)
+        out["cow_forks_total"] = float(
+            self.metrics.counter("serve/cow_forks").value)
+        out["kv_bytes_saved"] = self.metrics.gauge(
+            "serve/kv_bytes_saved").value
         ttft = self.metrics.histogram("serve/ttft_s")
         if ttft.count:
             out["ttft_p50_s"] = ttft.percentile(50)
             out["ttft_p99_s"] = ttft.percentile(99)
+        itk = self.metrics.histogram("serve/inter_token_s",
+                                     lo=1e-7, hi=3600.0)
+        if itk.count:
+            out["inter_token_p50_s"] = itk.percentile(50)
+            out["inter_token_p99_s"] = itk.percentile(99)
         rate = self.metrics.histogram("serve/tokens_per_s",
                                       lo=1e-3, hi=1e6)
         if rate.count:

@@ -232,6 +232,33 @@ def test_validate_rejects_malformed(tmp_path):
         validate_chrome_trace(str(empty))
 
 
+def test_validate_bench_json_schema_and_claims(tmp_path):
+    """Bench artifacts: dispatched by shape (meta, no traceEvents);
+    provenance keys are required and embedded claim verdicts must hold."""
+    from repro.obs.validate import validate, validate_bench_json
+    meta = {"commit": "abc123", "timestamp_utc": "2026-01-01T00:00:00Z",
+            "jax_version": "0.0", "backend": "cpu"}
+    good = tmp_path / "BENCH_x.json"
+    good.write_text(json.dumps({
+        "meta": meta,
+        "claims": [{"text": "t", "value": 1.5, "lo": 1.3,
+                    "hi": float("inf"), "ok": True}]}))
+    assert validate(str(good)) == {"meta": 1, "claim": 1}
+
+    no_meta = tmp_path / "no_meta.json"
+    no_meta.write_text(json.dumps({"meta": {"commit": "abc"}}))
+    with pytest.raises(ValueError, match="meta missing"):
+        validate_bench_json(str(no_meta))
+
+    failed = tmp_path / "failed.json"
+    failed.write_text(json.dumps({
+        "meta": meta,
+        "claims": [{"text": "t", "value": 1.1, "lo": 1.3, "hi": 2.0,
+                    "ok": False}]}))
+    with pytest.raises(ValueError, match="claim 0 FAILED"):
+        validate_bench_json(str(failed))
+
+
 def test_device_accumulator_matches_eager_bit_for_bit():
     """Batched drain must route EXACTLY the values eager float() would:
     one device_get at the window boundary, zero numerical difference."""
