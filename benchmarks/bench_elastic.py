@@ -222,9 +222,7 @@ def run(smoke: bool = False, out: Path = OUT) -> BenchResult:
         f"{head['meta']['state_GB']:.2f} GB; survivors keep shards local, "
         f"joiners fetch layer ranges from the nearest holder")
 
-    write_bench_json(str(out),
-                     {"record": record,
-                      "claims": [c.__dict__ for c in res.claims]})
+    write_bench_json(str(out), {"record": record}, claims=res.claims)
     res.notes.append(f"wrote {out.name}")
     return res
 

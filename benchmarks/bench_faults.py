@@ -272,8 +272,7 @@ def run(smoke: bool = False, out: Path = OUT) -> BenchResult:
         f"{rep['sim_corrupted_shard_copies']} corrupted shard copies "
         f"degraded recovery to surviving holders")
     write_bench_json(out, {"result": record, "rows": res.rows,
-                           "claims": [c.__dict__ for c in res.claims],
-                           "notes": res.notes})
+                           "notes": res.notes}, claims=res.claims)
     return res
 
 

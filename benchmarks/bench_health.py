@@ -1,0 +1,455 @@
+"""Health-analytics benchmark: detection quality against seeded ground
+truth, the health-driven closed loop, and the detector overhead budget.
+
+Three claims gate the PR-9 observability loop:
+
+1. **Detection quality** — fed only the telemetry a real fleet would
+   emit (per-replica round durations, per-link sync durations, the loss
+   stream), the streaming detectors recover the faults a seeded
+   ``FaultPlan`` injected — persistent stragglers, repeated link flaps,
+   a loss spike at a known index — at >= 0.9 precision AND recall, with
+   bounded detection latency.  The plan is ground truth for *scoring
+   only*; the detectors never read it.
+2. **Closed loop** — on a straggler-ridden fleet, the async local-SGD
+   trainer driven by :class:`repro.obs.HealthMonitor` detections
+   (``quorum = R`` shrunk only past *detected* stragglers) recovers
+   >= 80% of the tokens/s advantage that an oracle which reads the
+   fault plan (static ``quorum = R-1``) holds over the synchronous
+   barrier — and the detected straggler set matches the plan exactly.
+3. **Overhead** — the detector path stays inside the PR-6 telemetry
+   budget: the instrumented local-SGD loop is within noise of the
+   uninstrumented one, and the amortized per-round detector cost is
+   <= 2% of the measured real round wall-clock.
+
+    PYTHONPATH=src python -m benchmarks.bench_health [--smoke] [--out F]
+
+Writes ``BENCH_health.json`` — the artifact CI uploads.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import BenchResult, Claim, print_result, write_bench_json
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_health.json"
+
+# synthetic-stream geometry (detection-quality section)
+NOMINAL_S = 0.2          # healthy round duration
+BASE_LINK_S = 0.05       # healthy sync duration
+NOISE = 0.05             # +-5% multiplicative noise on every duration
+WARMUP_ROUNDS = 4        # flap-free prefix so link baselines exist
+
+
+def _cfg():
+    from repro.configs.opt import opt_config
+    return opt_config("opt-125m").reduced(num_layers=4, d_model=32,
+                                          vocab_size=64)
+
+
+def _tc(steps):
+    from repro.train.trainer import TrainerConfig
+    return TrainerConfig(steps=steps, batch=2, seq_len=16, log_every=0)
+
+
+def _ls(**kw):
+    from repro.train.local_sgd import LocalSGDConfig
+    base = dict(inner_steps=2, nominal_step_s=0.1)
+    base.update(kw)
+    return LocalSGDConfig(**base)
+
+
+def _monitor():
+    from repro.obs import HealthMonitor, MetricsRegistry
+    return HealthMonitor(registry=MetricsRegistry())
+
+
+# -------------------------------------------------------------------------
+# 1. detection quality on synthetic telemetry with seeded ground truth
+
+
+def detection_quality(smoke: bool) -> Dict:
+    """Replay seeded FaultPlans as pure telemetry streams; score the
+    detectors' end-state verdicts against the plan."""
+    from repro.core.faultinject import FaultPlan
+
+    seeds = [3, 5] if smoke else [3, 5, 7, 11, 13]
+    R = 8
+    rounds = 16 if smoke else 24
+    agg = {"straggler": {"tp": 0, "fp": 0, "fn": 0},
+           "link": {"tp": 0, "fp": 0, "fn": 0},
+           "loss": {"tp": 0, "fp": 0, "fn": 0}}
+    straggler_latencies: List[int] = []
+    link_lag_rounds: List[int] = []
+    per_seed = []
+
+    for seed in seeds:
+        # 0.2 keeps every realized draw below the fleet-median baseline's
+        # 50% breakdown point (a majority-straggler fleet has no healthy
+        # reference to be slow *relative to*)
+        plan = FaultPlan(seed=seed, straggler_frac=0.2,
+                         link_flap_prob=0.08)
+        hm = _monitor()
+        need = hm.link.degrade_after
+        first_flag: Dict[str, int] = {}
+        spike_rounds: Dict[int, List[int]] = {r: [] for r in range(R)}
+        degrade_round: Dict[str, int] = {}
+        for t in range(rounds):
+            ts = t * NOMINAL_S
+            for r in range(R):
+                jig = np.random.default_rng([seed, r, t])
+                dur = NOMINAL_S * plan.slowdown(r) \
+                    * (1.0 + NOISE * (2.0 * jig.random() - 1.0))
+                a = hm.observe_step(r, dur, ts_s=ts)
+                if a is not None and a.kind == "straggler":
+                    first_flag.setdefault(str(r), t)
+                jit = plan.jitter_s(r, t) if t >= WARMUP_ROUNDS else 0.0
+                if jit > 0.0:
+                    spike_rounds[r].append(t)
+                link = (BASE_LINK_S
+                        * (1.0 + NOISE * (2.0 * jig.random() - 1.0))
+                        + jit)
+                a = hm.observe_link(r, link, ts_s=ts)
+                # each spike alerts; the entity is *degraded* (the
+                # verdict schedulers act on) once `need` spikes landed
+                if a is not None and a.kind == "link_degraded" \
+                        and a.detail.get("spikes", 0) >= need:
+                    degrade_round.setdefault(str(r), t)
+
+        truth_strag = {str(r) for r in range(R) if plan.is_straggler(r)}
+        pred_strag = hm.stragglers()
+        truth_link = {str(r) for r in range(R)
+                      if len(spike_rounds[r]) >= need}
+        pred_link = hm.degraded_links()
+        for key, truth, pred in (("straggler", truth_strag, pred_strag),
+                                 ("link", truth_link, pred_link)):
+            agg[key]["tp"] += len(truth & pred)
+            agg[key]["fp"] += len(pred - truth)
+            agg[key]["fn"] += len(truth - pred)
+        straggler_latencies.extend(first_flag[e] + 1 for e in truth_strag
+                                   if e in first_flag)
+        # a degraded link should be called the round its `need`-th
+        # detectable spike lands, not later
+        link_lag_rounds.extend(
+            degrade_round[str(r)] - spike_rounds[r][need - 1]
+            for r in range(R)
+            if str(r) in truth_link and str(r) in degrade_round)
+
+        # loss stream: smooth decay + noise, one spike at a known index
+        hm2 = _monitor()
+        inject_at = rounds * 2
+        spike_alerts = []
+        lrng = np.random.default_rng([seed, 999])
+        for t in range(rounds * 4):
+            loss = 3.0 * float(np.exp(-0.005 * t)) \
+                + 0.01 * float(lrng.standard_normal())
+            if t == inject_at:
+                loss += 2.0
+            a = hm2.observe_loss(loss, ts_s=float(t))
+            if a is not None and a.kind == "loss_spike":
+                spike_alerts.append(t)
+        agg["loss"]["tp"] += int(inject_at in spike_alerts)
+        agg["loss"]["fn"] += int(inject_at not in spike_alerts)
+        agg["loss"]["fp"] += sum(t != inject_at for t in spike_alerts)
+
+        per_seed.append({
+            "seed": seed,
+            "true_stragglers": sorted(truth_strag),
+            "detected_stragglers": sorted(pred_strag),
+            "true_degraded_links": sorted(truth_link),
+            "detected_degraded_links": sorted(pred_link),
+            "loss_spike_alert_rounds": spike_alerts,
+            "alerts_by_kind": hm.alerts_by_kind()})
+
+    def _pr(c):
+        p = c["tp"] / max(c["tp"] + c["fp"], 1)
+        r = c["tp"] / max(c["tp"] + c["fn"], 1)
+        return {"precision": p, "recall": r, **c}
+
+    return {
+        "seeds": seeds, "replicas": R, "rounds": rounds,
+        "noise": NOISE, "warmup_rounds": WARMUP_ROUNDS,
+        "straggler": _pr(agg["straggler"]),
+        "link": _pr(agg["link"]),
+        "loss": _pr(agg["loss"]),
+        "straggler_latency_rounds": {
+            "max": max(straggler_latencies, default=0),
+            "all": straggler_latencies},
+        "link_lag_rounds": {"max": max(link_lag_rounds, default=0),
+                            "all": link_lag_rounds},
+        "per_seed": per_seed,
+    }
+
+
+# -------------------------------------------------------------------------
+# 2. closed loop: sync vs plan-aware oracle vs health-driven async
+
+
+def closed_loop(smoke: bool) -> Dict:
+    """Same plan, three runs: synchronous barrier; oracle async whose
+    static ``quorum = R-1`` encodes plan knowledge (someone is slow);
+    health async at full ``quorum = R`` where only *detections* shrink
+    the barrier.  Gate: health recovers >= 80% of the oracle's tokens/s
+    advantage over sync."""
+    from repro.core.faultinject import FaultPlan
+    from repro.train.local_sgd import train_local_sgd
+
+    R = 10
+    rounds = 8 if smoke else 12
+    tc = _tc(steps=2 * rounds)
+    # seed 5 realizes exactly 1 persistent straggler (~7x) out of R=10
+    plan = FaultPlan(seed=5, straggler_frac=0.12, crash_prob=0.02)
+    cfg = _cfg()
+
+    sync = train_local_sgd(cfg, tc, _ls(replicas=R), fault_plan=plan)
+    oracle = train_local_sgd(
+        cfg, tc, _ls(replicas=R, async_mode=True, quorum=R - 1,
+                     staleness_bound=4), fault_plan=plan)
+    hm = _monitor()
+    health = train_local_sgd(
+        cfg, tc, _ls(replicas=R, async_mode=True, quorum=R,
+                     staleness_bound=4), fault_plan=plan, health=hm)
+
+    truth = {str(r) for r in range(R) if plan.is_straggler(r)}
+    detected = hm.stragglers()
+    adv_oracle = (oracle.virtual_tokens_per_s
+                  - sync.virtual_tokens_per_s)
+    adv_health = (health.virtual_tokens_per_s
+                  - sync.virtual_tokens_per_s)
+    out = {
+        "replicas": R, "rounds": rounds,
+        "true_stragglers": sorted(truth),
+        "detected_stragglers": sorted(detected),
+        "detection_mismatch": len(truth ^ detected),
+        "health_excluded_updates": health.health_excluded_updates,
+        "health_summary": health.health_summary,
+        "advantage_recovered": adv_health / max(adv_oracle, 1e-9),
+    }
+    for tag, r in (("sync", sync), ("oracle", oracle),
+                   ("health", health)):
+        out[tag] = {"tokens_per_s": r.virtual_tokens_per_s,
+                    "virtual_time_s": r.virtual_time_s,
+                    "final_loss": r.final_loss,
+                    "contributed_steps": r.contributed_steps,
+                    "fault_counts": r.fault_counts}
+    return out
+
+
+# -------------------------------------------------------------------------
+# 3. overhead: micro cost per observe + instrumented-loop wall clock
+
+
+def overhead(smoke: bool) -> Dict:
+    from repro.core.faultinject import FaultPlan
+    from repro.train.local_sgd import train_local_sgd
+
+    # micro: amortized host cost of one detector observation
+    hm = _monitor()
+    n = 5000 if smoke else 20000
+    t0 = time.perf_counter()
+    for i in range(n):
+        hm.observe_step(i % 8, NOMINAL_S * (1.0 + 1e-4 * (i % 7)),
+                        ts_s=float(i))
+    us_per_observe = (time.perf_counter() - t0) / n * 1e6
+
+    # macro: sync local-SGD with and without a monitor attached —
+    # interleaved best-of passes so shared-host noise spreads evenly
+    R, steps = 4, 12
+    cfg, tc = _cfg(), _tc(steps=steps)
+    plan = FaultPlan(seed=7, straggler_frac=0.2)
+    rounds = steps // 2
+
+    def _timed(with_health):
+        mon = _monitor() if with_health else None
+        w0 = time.perf_counter()
+        train_local_sgd(cfg, tc, _ls(replicas=R), fault_plan=plan,
+                        health=mon)
+        return time.perf_counter() - w0
+
+    _timed(False)                                  # warmup (compile)
+    best = {"off": float("inf"), "on": float("inf")}
+    for _ in range(3):
+        best["off"] = min(best["off"], _timed(False))
+        best["on"] = min(best["on"], _timed(True))
+    ratio = best["off"] / best["on"]               # >1 means on is faster
+
+    # observations per sync round: step+link per replica, one loss
+    calls_per_round = 2 * R + 1
+    round_wall_us = best["off"] / rounds * 1e6
+    fraction = calls_per_round * us_per_observe / round_wall_us
+    return {
+        "us_per_observe": us_per_observe,
+        "observe_calls": n,
+        "wall_s_uninstrumented": best["off"],
+        "wall_s_instrumented": best["on"],
+        "throughput_ratio": ratio,
+        "calls_per_round": calls_per_round,
+        "round_wall_us": round_wall_us,
+        "detector_fraction_of_round": fraction,
+    }
+
+
+# -------------------------------------------------------------------------
+# 4. SLO burn-rate demo: breach on a bad burst, recover on hysteresis
+
+
+def slo_demo() -> Dict:
+    from repro.obs import MetricsRegistry, SLOMonitor, serve_slos
+
+    slo = SLOMonitor(serve_slos(ttft_p99_s=0.5, gco2e_budget=100.0,
+                                horizon_s=3600.0),
+                     registry=MetricsRegistry())
+    for t in range(64):                       # healthy traffic
+        slo.observe("serve_ttft", 0.1, t=float(t))
+    for t in range(64, 104):                  # burst of slow TTFTs
+        slo.observe("serve_ttft", 0.9, t=float(t))
+    burning_during = slo.burning("serve_ttft")
+    for t in range(104, 304):                 # recovery traffic
+        slo.observe("serve_ttft", 0.1, t=float(t))
+    # budget SLO: spend carbon at 4x the sustainable pace
+    for t in range(10):
+        slo.observe("serve_gco2e", 100.0 / 3600.0 * 4.0 * 60.0,
+                    t=float(t * 60.0))
+    events = [e["event"] for e in slo.events if e["slo"] == "serve_ttft"]
+    return {
+        "ttft_events": slo.events,
+        "burning_during_burst": burning_during,
+        "breach_recover_mismatch": int(
+            events != ["slo.breach", "slo.recovered"]
+            or not burning_during),
+        "gco2e_burn": slo.burn_rate("serve_gco2e"),
+        "verdicts": slo.verdicts(),
+        "summary": slo.summary_line(),
+    }
+
+
+# -------------------------------------------------------------------------
+
+
+def run(smoke: bool = False, out: Path = OUT) -> BenchResult:
+    res = BenchResult(name="bench_health")
+    record: Dict[str, Dict] = {"config": {
+        "model": "opt-125m reduced (4L, d32)", "batch": 2, "seq_len": 16,
+        "inner_steps": 2, "smoke": smoke}}
+
+    det = detection_quality(smoke)
+    record["detection"] = det
+    for key in ("straggler", "link", "loss"):
+        res.rows.append({
+            "scenario": "detection", "detector": key,
+            "precision": round(det[key]["precision"], 3),
+            "recall": round(det[key]["recall"], 3),
+            "tp": det[key]["tp"], "fp": det[key]["fp"],
+            "fn": det[key]["fn"]})
+    worst_p = min(det[k]["precision"] for k in ("straggler", "link",
+                                                "loss"))
+    worst_r = min(det[k]["recall"] for k in ("straggler", "link",
+                                             "loss"))
+    res.claims.append(Claim(
+        "detectors recover seeded stragglers/flaps/loss-spikes from "
+        "telemetry alone: precision (worst detector)", worst_p, 0.9,
+        1.0))
+    res.claims.append(Claim(
+        "detectors recover seeded stragglers/flaps/loss-spikes from "
+        "telemetry alone: recall (worst detector)", worst_r, 0.9, 1.0))
+    res.claims.append(Claim(
+        "straggler detection latency is bounded (max rounds of "
+        "telemetry until flag)",
+        float(det["straggler_latency_rounds"]["max"]), 0, 6))
+    res.claims.append(Claim(
+        "link degradation is called the round its qualifying spike "
+        "lands (max lag, rounds)",
+        float(det["link_lag_rounds"]["max"]), 0, 0))
+
+    loop = closed_loop(smoke)
+    record["closed_loop"] = loop
+    for tag in ("sync", "oracle", "health"):
+        res.rows.append({
+            "scenario": f"closed loop R={loop['replicas']}", "mode": tag,
+            "tokens_per_s": round(loop[tag]["tokens_per_s"], 1),
+            "vclock_s": round(loop[tag]["virtual_time_s"], 2),
+            "final_loss": round(loop[tag]["final_loss"], 4),
+            "contributed": loop[tag]["contributed_steps"]})
+    res.claims.append(Claim(
+        "health-driven async recovers >= 80% of the plan-aware oracle's "
+        "tokens/s advantage over sync (fraction)",
+        loop["advantage_recovered"], 0.8, float("inf")))
+    res.claims.append(Claim(
+        "detected straggler set matches the plan's ground truth "
+        "(symmetric difference)",
+        float(loop["detection_mismatch"]), 0, 0))
+
+    ovh = overhead(smoke)
+    record["overhead"] = ovh
+    res.rows.append({
+        "scenario": "overhead",
+        "us_per_observe": round(ovh["us_per_observe"], 2),
+        "throughput_ratio": round(ovh["throughput_ratio"], 3),
+        "fraction_of_round": round(
+            ovh["detector_fraction_of_round"], 5)})
+    # the micro-measured fraction claim below is the principled <=2%
+    # gate; this macro ratio is a sanity band only — CPU-XLA step times
+    # jitter several % run to run on a shared host, so the floor is
+    # 0.90 (exact best-of-3 ratio is in the JSON)
+    res.claims.append(Claim(
+        "health-instrumented local-SGD loop stays within noise of "
+        "uninstrumented (wall-clock ratio)",
+        ovh["throughput_ratio"], 0.90, float("inf")))
+    res.claims.append(Claim(
+        "amortized detector cost per round <= 2% of the real round "
+        "wall-clock (fraction)",
+        ovh["detector_fraction_of_round"], 0.0, 0.02))
+
+    slo = slo_demo()
+    record["slo"] = slo
+    res.rows.append({
+        "scenario": "slo", "events": len(slo["ttft_events"]),
+        "gco2e_burn": round(slo["gco2e_burn"], 2),
+        "summary": slo["summary"]})
+    res.claims.append(Claim(
+        "TTFT SLO walks the breach -> recovered cycle on a slow burst "
+        "(sequence mismatches)",
+        float(slo["breach_recover_mismatch"]), 0, 0))
+    res.claims.append(Claim(
+        "budget SLO burn tracks spend pace (4x pace -> burn >= 2)",
+        slo["gco2e_burn"], 2.0, float("inf")))
+
+    res.notes.append(
+        f"detection: straggler P/R "
+        f"{det['straggler']['precision']:.2f}/"
+        f"{det['straggler']['recall']:.2f}, link "
+        f"{det['link']['precision']:.2f}/{det['link']['recall']:.2f} "
+        f"across {len(det['seeds'])} seeded plans")
+    res.notes.append(
+        f"closed loop: sync {loop['sync']['tokens_per_s']:.0f} -> "
+        f"oracle {loop['oracle']['tokens_per_s']:.0f} -> health "
+        f"{loop['health']['tokens_per_s']:.0f} tok/s "
+        f"({loop['advantage_recovered']:.2f}x of oracle advantage, "
+        f"{loop['health_excluded_updates']} quorum exclusions, plan "
+        f"never read)")
+    res.notes.append(
+        f"overhead: {ovh['us_per_observe']:.1f}us/observe, "
+        f"{ovh['detector_fraction_of_round']*100:.3f}% of a real round")
+    write_bench_json(out, {"result": record, "rows": res.rows,
+                           "notes": res.notes}, claims=res.claims)
+    res.notes.append(f"wrote {Path(out).name}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", type=Path, default=OUT)
+    args = ap.parse_args()
+    res = run(smoke=args.smoke, out=args.out)
+    print_result(res)
+    raise SystemExit(0 if res.ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -125,9 +125,7 @@ def run(smoke: bool = False, out: Path = OUT) -> BenchResult:
         f"activation WAN, K=16 flips to region-contiguous pipelines — "
         f"the cost model, not a heuristic, picks the crossing to pay")
 
-    write_bench_json(str(out),
-                     {"record": record,
-                      "claims": [c.__dict__ for c in res.claims]})
+    write_bench_json(str(out), {"record": record}, claims=res.claims)
     res.notes.append(f"wrote {out.name}")
     return res
 

@@ -358,9 +358,7 @@ def run(n_requests: int = 12, max_new: int = 16, slots: int = 4,
         value=data["p99_inter_token_ratio"], lo=0.0, hi=0.9))
 
     # embed the verdicts so repro.obs.validate can re-check the artifact
-    data["claims"] = [{"text": c.text, "value": c.value, "lo": c.lo,
-                       "hi": c.hi, "ok": c.ok} for c in res.claims]
-    write_bench_json(out_path, data)
+    write_bench_json(out_path, data, claims=res.claims)
     res.notes.append(f"wrote {out_path}")
     return res
 

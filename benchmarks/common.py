@@ -40,15 +40,22 @@ def bench_meta() -> Dict[str, Any]:
 
 
 def write_bench_json(path: str, data: Dict[str, Any],
-                     registry=None) -> None:
+                     registry=None, claims=None) -> None:
     """Write a bench artifact with the uniform schema: the module's own
     payload + ``meta`` (provenance, see :func:`bench_meta`) + optional
     ``metrics`` (a ``repro.obs`` MetricsRegistry snapshot — histogram
-    summaries with p50/p95/p99)."""
+    summaries with p50/p95/p99) + optional embedded ``claims`` verdicts
+    (a list of :class:`Claim`) — the block ``repro.obs.validate``
+    re-checks on every committed artifact, so a BENCH_*.json whose gates
+    no longer hold fails CI without re-running the benchmark."""
     payload = dict(data)
     payload["meta"] = bench_meta()
     if registry is not None:
         payload["metrics"] = registry.snapshot()
+    if claims is not None:
+        payload["claims"] = [
+            {"text": c.text, "value": c.value, "lo": c.lo, "hi": c.hi,
+             "ok": c.ok} for c in claims]
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
 

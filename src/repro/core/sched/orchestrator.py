@@ -27,6 +27,17 @@ replan + priced recovery), and checkpoint-shard corruption knocks holder
 copies out of the recovery spec — a corrupted survivor then degrades to
 a neighbour or WAN/store fetch in the recovery pricing instead of
 crashing the run.
+
+An optional :class:`repro.obs.HealthMonitor` closes the observability
+loop (PR 9): the orchestrator feeds it the per-device compute and link
+durations each step *observes* (never the plan's draws directly — the
+plan stays the sim's hidden ground truth), and any device the monitor
+flags — straggler or repeatedly-flapping link — is **degraded** out of
+the active set through the normal churn machinery, so the rework /
+replan / priced-recovery pipeline prices the eviction exactly like an
+organic departure.  Because the synchronous pipeline is gated by its
+slowest member, evicting a detected straggler is a throughput decision
+the fleet could never make by reading the plan it does not have.
 """
 
 from __future__ import annotations
@@ -111,14 +122,23 @@ class SimResult:
     fault_counts: Dict[str, int] = field(default_factory=dict)
     crashes: int = 0
     corrupted_shard_copies: int = 0
+    # health-driven response accounting (empty without a HealthMonitor)
+    health_evictions: int = 0
+    health_summary: Optional[Dict] = None
 
 
 class Orchestrator:
     def __init__(self, cfg: ModelConfig, fleet: Sequence[FleetDevice],
-                 sim: SimConfig):
+                 sim: SimConfig, *, health=None):
         self.cfg = cfg
         self.fleet = list(fleet)
         self.sim = sim
+        # PR 9: detection-driven degradation.  ``health`` is a
+        # repro.obs.HealthMonitor fed ONLY observed durations; devices
+        # it flags land in ``degraded`` and stay out of admission until
+        # the detector clears them.
+        self.health = health
+        self.degraded: Set[int] = set()
         # named substreams: join draws never perturb leave draws (and
         # neither shifts when the keyed-stream fault plan is toggled)
         self.rng_join = _substream(sim.seed, "join")
@@ -151,6 +171,17 @@ class Orchestrator:
         for d in self.fleet:
             rate, _ = carbon_rate(d, hour, self.traces)
             ok = d.charging and rate <= self.sim.carbon_threshold_g_per_gflop
+            if ok and d.device_id in self.degraded:
+                # health-degraded: out until the detector clears it (an
+                # evicted device produces no new observations, so in
+                # practice degradation is sticky — by design)
+                if self.health is not None \
+                        and not self.health.is_straggler(d.device_id) \
+                        and str(d.device_id) \
+                        not in self.health.degraded_links():
+                    self.degraded.discard(d.device_id)
+                else:
+                    ok = False
             if ok and d.device_id in self._offline_until:
                 # crashed device: stays out until its rejoin step
                 ok = self._step >= self._offline_until[d.device_id]
@@ -243,6 +274,7 @@ class Orchestrator:
         restore_wan = 0.0
         restore_by_region: Dict[str, float] = {}
         recovery_energy_wh = 0.0
+        health_evictions = 0
 
         def _merge(dst: Dict[str, float], src: Dict[str, float]) -> None:
             for k, v in src.items():
@@ -345,6 +377,8 @@ class Orchestrator:
             compute_s = plan.step_time_s - plan.comm_s_per_step
             comm_s = plan.comm_s_per_step
             slow = 1.0
+            dev_slow: Dict[int, float] = {}
+            dev_jit: Dict[int, float] = {}
             if inj is not None:
                 # the synchronous pipeline is gated by its slowest
                 # member: the worst straggler stretches compute, and
@@ -356,12 +390,27 @@ class Orchestrator:
                         inj.emit("straggle", d.device_id, ts_s=t,
                                  slowdown=round(s_d, 3))
                     slow = max(slow, s_d)
+                    dev_slow[d.device_id] = s_d
                     j = inj.plan.jitter_s(d.device_id, steps)
                     if j > 0.0:
                         inj.emit("link_flap", d.device_id, ts_s=t,
                                  step=steps, jitter_s=round(j, 3))
                         comm_s += j
+                        dev_jit[d.device_id] = j
             step_s = compute_s * slow / max(derate, 1e-6) + comm_s
+            if self.health is not None:
+                # feed the monitor what a per-device span would measure:
+                # that device's compute time under its own slowdown /
+                # derate, and its share of the sync plus its link jitter
+                for d in self.active:
+                    self.health.observe_step(
+                        d.device_id,
+                        compute_s * dev_slow.get(d.device_id, 1.0)
+                        / max(derate, 1e-6), ts_s=t)
+                    self.health.observe_link(
+                        d.device_id,
+                        plan.comm_s_per_step
+                        + dev_jit.get(d.device_id, 0.0), ts_s=t)
             self._dt = step_s
 
             # advance thermals under load
@@ -420,8 +469,30 @@ class Orchestrator:
                                 inj.emit("corrupt", h, ts_s=t,
                                          step=steps, shard=s_i)
 
+            # health-driven degradation: evict any member the monitor
+            # has flagged (detected straggler or repeatedly-flapping
+            # link) — the departure flows through the same rework /
+            # replan / priced-recovery machinery as organic churn
+            evicted: List[int] = []
+            if self.health is not None:
+                bad = {int(e) for e in self.health.stragglers()
+                       if e.lstrip("-").isdigit()}
+                bad |= {int(e) for e in self.health.degraded_links()
+                        if e.lstrip("-").isdigit()}
+                for d in list(self.active):
+                    if d.device_id in bad and len(self.active) > 1:
+                        self.active = [a for a in self.active
+                                       if a.device_id != d.device_id]
+                        self.degraded.add(d.device_id)
+                        evicted.append(d.device_id)
+                if evicted:
+                    health_evictions += len(evicted)
+                    tr.instant("degrade", "sched", track="fleet",
+                               ts_s=t, step=steps,
+                               devices=sorted(evicted), reason="health")
+
             # churn
-            changes_now = self._depart() + self._admit(hour)
+            changes_now = len(evicted) + self._depart() + self._admit(hour)
             if not self.active:
                 # carbon/charging eviction can empty the fleet (unlike
                 # _depart, _admit has no min-1 floor): keep the seed
@@ -509,6 +580,9 @@ class Orchestrator:
             crashes=inj.counts.get("crash", 0) if inj is not None else 0,
             corrupted_shard_copies=inj.counts.get("corrupt", 0)
             if inj is not None else 0,
+            health_evictions=health_evictions,
+            health_summary=self.health.summary()
+            if self.health is not None else None,
         )
 
 

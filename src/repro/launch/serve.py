@@ -53,6 +53,15 @@ def main() -> None:
                     help="write the engine metrics registry as JSONL "
                          "(TTFT p50/p99, per-request tokens/s, KV "
                          "utilization histograms)")
+    ap.add_argument("--slo", default=None, metavar="K=V[,K=V...]",
+                    help="monitor serve SLOs (the engine defers "
+                         "admissions while the TTFT SLO burns); keys: "
+                         "ttft=<p99 s>, itl=<inter-token p99 s>, "
+                         "gco2e=<budget>, horizon=<s> (e.g. "
+                         "--slo ttft=0.5,gco2e=2)")
+    ap.add_argument("--health-out", default=None,
+                    help="write the SLO verdicts + alert record as "
+                         "JSONL")
     args = ap.parse_args()
 
     if args.host_devices:
@@ -76,10 +85,31 @@ def main() -> None:
         from repro.obs import Tracer, set_tracer
         set_tracer(Tracer(enabled=True, process=f"serve:{cfg.name}"))
 
+    slo = health = None
+    if args.slo is not None or args.health_out is not None:
+        from repro.obs import HealthMonitor, SLOMonitor, serve_slos
+        health = HealthMonitor()
+        kv = dict(p.split("=", 1)
+                  for p in (args.slo or "").split(",") if p)
+        slo = SLOMonitor(serve_slos(
+            ttft_p99_s=float(kv.get("ttft", 0.5)),
+            inter_token_p99_s=float(kv.get("itl", 0.2)),
+            gco2e_budget=float(kv.get("gco2e", 0)),
+            horizon_s=float(kv.get("horizon", 3600.0))),
+            registry=health.registry)
+
     if not args.legacy and M.paged_decode_supported(cfg):
-        _run_engine(args, cfg, params, device)
+        _run_engine(args, cfg, params, device, slo=slo, health=health)
     else:
         _run_legacy(args, cfg, params, device)
+        if slo is not None:
+            print(f"[serve] {slo.summary_line()}")
+
+    if args.health_out and health is not None:
+        health.dump_jsonl(args.health_out, slo=slo,
+                          meta={"arch": cfg.name,
+                                "requests": args.batch})
+        print(f"[serve] health record: {args.health_out}")
 
     if args.trace_out:
         from repro.obs import get_tracer
@@ -103,7 +133,8 @@ def _mixed_requests(args, cfg, tag: str):
     return reqs
 
 
-def _run_engine(args, cfg, params, device) -> None:
+def _run_engine(args, cfg, params, device, slo=None,
+                health=None) -> None:
     from repro.serve.engine import EngineConfig, ServeEngine
     from repro.serve.paged_cache import blocks_for
 
@@ -116,7 +147,7 @@ def _run_engine(args, cfg, params, device) -> None:
                         cache_dtype=args.kv_dtype,
                         prefill_chunk=args.prefill_chunk,
                         prefix_sharing=not args.no_prefix_sharing)
-    engine = ServeEngine(params, cfg, ecfg, device=device)
+    engine = ServeEngine(params, cfg, ecfg, device=device, slo=slo)
     # warmup compiles BOTH step shapes (C=1 decode + C=chunk mixed) and
     # the sampler; reset_stats() then zeroes the EnergyMonitor so the
     # reported J/token prices serving, not XLA compilation
@@ -152,6 +183,16 @@ def _run_engine(args, cfg, params, device) -> None:
           f"(chunk={ecfg.prefill_chunk}, kv={ecfg.cache_dtype})")
     print(f"[serve] energy ({device.name}): {s['energy_j']:.2f} J "
           f"({s['j_per_token']:.3f} J/token, {s['carbon_g']:.4f} gCO2e)")
+    if slo is not None:
+        # carbon spend paces against the budget over the serving window
+        slo.observe("serve_gco2e", s["carbon_g"], t=0.0)
+        slo.observe("serve_gco2e", 0.0, t=max(engine.wall_s, 1e-9))
+        deferred = int(engine.metrics.counter(
+            "serve/admission_deferred").value)
+        print(f"[serve] {slo.summary_line()} | admissions deferred "
+              f"under burn: {deferred}")
+    if health is not None:
+        print(f"[serve] health: {health.summary_line()}")
 
 
 def _run_legacy(args, cfg, params, device) -> None:

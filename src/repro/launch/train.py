@@ -18,6 +18,12 @@ writes the metrics registry (per-phase step-time histograms with
 p50/p95/p99, loss/grad-norm distributions, byte counters).  Validate
 either with ``python -m repro.obs.validate <file>``.
 
+Health: ``--health-out health.jsonl`` attaches the streaming detectors
+(stragglers / link degradation / loss spikes — the async quorum then
+excludes *detected* stragglers) and writes their alert record;
+``--slo tokens_per_s=500,gco2e=5`` adds burn-rate-monitored SLOs, with
+a one-line verdict summary at the end of the run.
+
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
         --steps 100
@@ -83,6 +89,16 @@ def main() -> None:
                     help="write a Chrome-trace/Perfetto JSON timeline")
     ap.add_argument("--metrics-out", default=None,
                     help="write the metrics registry as JSONL")
+    ap.add_argument("--slo", default=None, metavar="K=V[,K=V...]",
+                    help="monitor train SLOs and print end-of-run "
+                         "verdicts; keys: tokens_per_s=<floor>, "
+                         "staleness=<bound>, gco2e=<budget>, "
+                         "horizon=<s> (e.g. --slo tokens_per_s=500,"
+                         "gco2e=5)")
+    ap.add_argument("--health-out", default=None,
+                    help="attach the streaming health detectors "
+                         "(straggler / link / loss-spike) and write "
+                         "their alert record + SLO verdicts as JSONL")
     args = ap.parse_args()
 
     if args.host_devices:
@@ -129,6 +145,19 @@ def main() -> None:
                                crash_prob=args.crash_prob,
                                link_flap_prob=args.link_flap_prob)
 
+    health = slo = None
+    if args.health_out is not None or args.slo is not None:
+        from repro.obs import HealthMonitor, SLOMonitor, train_slos
+        health = HealthMonitor(registry=registry)
+        if args.slo is not None:
+            kv = dict(p.split("=", 1) for p in args.slo.split(",") if p)
+            slo = SLOMonitor(train_slos(
+                tokens_per_s_floor=float(kv.get("tokens_per_s", 0)),
+                staleness_bound=float(kv.get("staleness", 0)),
+                gco2e_budget=float(kv.get("gco2e", 0)),
+                horizon_s=float(kv.get("horizon", 3600.0))),
+                registry=health.registry)
+
     def _run():
         if args.local_sgd or args.async_mode:
             from repro.train.local_sgd import (LocalSGDConfig,
@@ -144,8 +173,9 @@ def main() -> None:
             return train_local_sgd(
                 cfg, tc, ls,
                 monitor=None if args.async_mode else monitor,
-                metrics=registry, fault_plan=fault_plan)
-        return train(cfg, tc, monitor=monitor, metrics=registry)
+                metrics=registry, fault_plan=fault_plan, health=health)
+        return train(cfg, tc, monitor=monitor, metrics=registry,
+                     health=health)
 
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
@@ -171,6 +201,25 @@ def main() -> None:
             faults = " ".join(f"{k}={v}"
                               for k, v in sorted(res.fault_counts.items()))
             print(f"[train] faults: {faults}")
+
+    if slo is not None:
+        tok_s = getattr(res, "virtual_tokens_per_s", 0.0) \
+            or rate * args.batch * args.seq
+        slo.observe("train_tokens_per_s", tok_s)
+        elapsed = getattr(res, "virtual_time_s", 0.0) \
+            or args.steps / max(rate, 1e-9)
+        slo.observe("train_gco2e", led.operational_kg * 1000, t=0.0)
+        slo.observe("train_gco2e", 0.0, t=elapsed)
+    if health is not None:
+        print(f"[train] health: {health.summary_line()}")
+    if slo is not None:
+        print(f"[train] {slo.summary_line()}")
+    if args.health_out:
+        health.dump_jsonl(args.health_out, slo=slo,
+                          meta={"arch": cfg.name, "steps": args.steps,
+                                "local_sgd": bool(args.local_sgd
+                                                  or args.async_mode)})
+        print(f"[train] health record: {args.health_out}")
 
     if args.trace_out:
         from repro.obs import get_tracer

@@ -9,15 +9,27 @@ step phases, the serving engine's per-request lifecycle
 (churn / replan / restore / checkpoint on the simulated clock), and
 EnergyMonitor / CarbonLedger attributions (J, gCO2e) attached to
 whatever span encloses them.
+
+Since PR 9 the telemetry is also an *input*: :class:`HealthMonitor`
+runs streaming detectors (stragglers, link degradation, loss spikes /
+divergence) over the observed durations and losses, :class:`SLOMonitor`
+evaluates declarative SLOs with multi-window burn rates, and the
+scheduler / async trainer / serve engine act on their verdicts —
+``python -m repro.obs.analyze`` is the offline counterpart.
 """
 
+from repro.obs.health import (Alert, HealthMonitor, LinkDegradeDetector,
+                              LossSpikeDetector, StragglerDetector)
 from repro.obs.metrics import (Counter, DeviceAccumulator, Gauge,
                                Histogram, MetricsRegistry)
+from repro.obs.slo import (SLOMonitor, SLOSpec, serve_slos, train_slos)
 from repro.obs.trace import (NULL_SPAN, Span, Tracer, get_tracer,
                              set_tracer)
 
 __all__ = [
-    "Counter", "DeviceAccumulator", "Gauge", "Histogram",
-    "MetricsRegistry", "NULL_SPAN", "Span", "Tracer", "get_tracer",
-    "set_tracer",
+    "Alert", "Counter", "DeviceAccumulator", "Gauge", "HealthMonitor",
+    "Histogram", "LinkDegradeDetector", "LossSpikeDetector",
+    "MetricsRegistry", "NULL_SPAN", "SLOMonitor", "SLOSpec", "Span",
+    "StragglerDetector", "Tracer", "get_tracer", "serve_slos",
+    "set_tracer", "train_slos",
 ]

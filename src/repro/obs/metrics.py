@@ -62,7 +62,7 @@ class Histogram:
     overflow buckets; exact count/sum/min/max."""
 
     __slots__ = ("lo", "hi", "edges", "counts", "count", "sum",
-                 "min", "max")
+                 "min", "max", "rejected")
 
     def __init__(self, lo: float = 1e-7, hi: float = 1e4,
                  nbuckets: int = 120):
@@ -79,8 +79,16 @@ class Histogram:
         self.sum = 0.0
         self.min = math.inf
         self.max = -math.inf
+        self.rejected = 0
 
     def observe(self, v: float) -> None:
+        if not math.isfinite(v):
+            # a single NaN would poison sum/mean forever and an inf
+            # would wreck the percentile clamp — and downstream the
+            # loss-spike detector needs to see spikes, not a NaN-blinded
+            # snapshot.  Count the rejection so it is still observable.
+            self.rejected += 1
+            return
         self.counts[bisect_right(self.edges, v)] += 1
         self.count += 1
         self.sum += v
@@ -114,6 +122,8 @@ class Histogram:
     def snapshot(self) -> Dict[str, Any]:
         out: Dict[str, Any] = {"type": "histogram", "count": self.count,
                                "sum": self.sum}
+        if self.rejected:
+            out["rejected"] = self.rejected
         if self.count:
             out.update(mean=self.sum / self.count, min=self.min,
                        max=self.max, p50=self.percentile(50),

@@ -9,9 +9,13 @@ https://ui.perfetto.dev loads): a ``traceEvents`` list whose entries
 carry ``ph``/``ts``/``pid``/``tid``, with ``dur`` on complete (``X``)
 events.  ``.jsonl`` files are validated as either a metrics dump (lines
 of ``{"record": "metric", "name", "type", ...}`` with histogram
-summaries carrying count/sum and percentiles when non-empty) or a raw
-trace event log (lines of ``{name, ph, ts_us, dur_us, track, args}``).
-Exits non-zero, naming the offending line/event, on any violation.
+summaries carrying count/sum and percentiles when non-empty), a raw
+trace event log (lines of ``{name, ph, ts_us, dur_us, track, args}``),
+or a health artifact (``--health-out``: alert / slo-verdict /
+health_summary records).  Fault (``fault.<kind>``), alert
+(``alert.<kind>``) and SLO (``slo.breach``/``slo.recovered``) instants
+are schema-checked wherever they appear.  Exits non-zero, naming the
+offending line/event, on any violation.
 """
 
 from __future__ import annotations
@@ -21,6 +25,54 @@ import sys
 from typing import Any, Dict
 
 _PHASES = {"X", "i", "C", "M", "b", "e", "n"}
+
+# alert.<kind> instants HealthMonitor may emit (cat "alert")
+_ALERT_KINDS = ("straggler", "straggler_cleared", "link_degraded",
+                "loss_spike", "divergence")
+# slo.* instants SLOMonitor may emit (cat "slo")
+_SLO_NAMES = ("slo.breach", "slo.recovered")
+
+
+def _check_alert_event(path: str, where: str, rec: Dict[str, Any]) -> bool:
+    """Alert-event schema: every ``cat == "alert"`` record must be named
+    ``alert.<kind>`` with a known kind and carry ``entity`` +
+    ``detector`` in its args (what :class:`repro.obs.health.
+    HealthMonitor` emits)."""
+    if rec.get("cat") != "alert":
+        return False
+    name = rec.get("name", "")
+    if not (isinstance(name, str) and name.startswith("alert.")
+            and name[len("alert."):] in _ALERT_KINDS):
+        raise ValueError(f"{path}: {where} alert event has bad name "
+                         f"{name!r} (want 'alert.<kind>', kind in "
+                         f"{_ALERT_KINDS})")
+    args = rec.get("args")
+    if not isinstance(args, dict) or "entity" not in args \
+            or "detector" not in args:
+        raise ValueError(f"{path}: {where} alert event {name!r} args "
+                         "missing 'entity'/'detector'")
+    return True
+
+
+def _check_slo_event(path: str, where: str, rec: Dict[str, Any]) -> bool:
+    """SLO-event schema: every ``cat == "slo"`` record must be a
+    ``slo.breach``/``slo.recovered`` instant carrying the ``slo`` name
+    and numeric ``burn`` in its args (what :class:`repro.obs.slo.
+    SLOMonitor` emits)."""
+    if rec.get("cat") != "slo":
+        return False
+    name = rec.get("name", "")
+    if name not in _SLO_NAMES:
+        raise ValueError(f"{path}: {where} slo event has bad name "
+                         f"{name!r} (want one of {_SLO_NAMES})")
+    args = rec.get("args")
+    if not isinstance(args, dict) or "slo" not in args:
+        raise ValueError(f"{path}: {where} slo event {name!r} args "
+                         "missing 'slo'")
+    if not isinstance(args.get("burn"), (int, float)):
+        raise ValueError(f"{path}: {where} slo event {name!r} args "
+                         "missing numeric 'burn'")
+    return True
 
 
 def _check_fault_event(path: str, where: str, rec: Dict[str, Any]) -> bool:
@@ -68,6 +120,10 @@ def validate_chrome_trace(path: str) -> Dict[str, int]:
                 raise ValueError(f"{path}: event {i} (X) bad dur {dur!r}")
         if _check_fault_event(path, f"event {i}", e):
             counts["fault"] = counts.get("fault", 0) + 1
+        if _check_alert_event(path, f"event {i}", e):
+            counts["alert"] = counts.get("alert", 0) + 1
+        if _check_slo_event(path, f"event {i}", e):
+            counts["slo"] = counts.get("slo", 0) + 1
         counts[ph] = counts.get(ph, 0) + 1
     if counts.get("X", 0) == 0:
         raise ValueError(f"{path}: no complete (X) span events")
@@ -112,9 +168,36 @@ def validate_metrics_jsonl(path: str) -> Dict[str, int]:
                 raise ValueError(f"{path}: line {i + 1} unknown metric "
                                  f"type {rec['type']!r}")
             counts["metric"] = counts.get("metric", 0) + 1
+        elif rec.get("record") == "alert":
+            # --health-out artifact: one line per HealthMonitor alert
+            for key in ("kind", "detector", "entity", "value", "ts_s"):
+                if key not in rec:
+                    raise ValueError(f"{path}: line {i + 1} alert "
+                                     f"record missing {key!r}")
+            if rec["kind"] not in _ALERT_KINDS:
+                raise ValueError(f"{path}: line {i + 1} alert record "
+                                 f"unknown kind {rec['kind']!r}")
+            counts["alert"] = counts.get("alert", 0) + 1
+        elif rec.get("record") == "slo":
+            # --health-out artifact: one SLO verdict line per spec
+            for key in ("slo", "kind", "target", "worst_burn", "ok"):
+                if key not in rec:
+                    raise ValueError(f"{path}: line {i + 1} slo "
+                                     f"record missing {key!r}")
+            counts["slo"] = counts.get("slo", 0) + 1
+        elif rec.get("record") == "health_summary":
+            for key in ("alerts_total", "alerts_by_kind", "stragglers"):
+                if key not in rec:
+                    raise ValueError(f"{path}: line {i + 1} "
+                                     f"health_summary missing {key!r}")
+            counts["health_summary"] = counts.get("health_summary", 0) + 1
         elif "ph" in rec and "ts_us" in rec:      # raw trace event log
             if _check_fault_event(path, f"line {i + 1}", rec):
                 counts["fault"] = counts.get("fault", 0) + 1
+            if _check_alert_event(path, f"line {i + 1}", rec):
+                counts["alert"] = counts.get("alert", 0) + 1
+            if _check_slo_event(path, f"line {i + 1}", rec):
+                counts["slo"] = counts.get("slo", 0) + 1
             counts["event"] = counts.get("event", 0) + 1
         else:
             raise ValueError(f"{path}: line {i + 1} unrecognized record: "

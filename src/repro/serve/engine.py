@@ -145,7 +145,8 @@ class ServeEngine:
                  *, device: DeviceSpec = TPU_V5E,
                  intensity_kg_per_kwh: Optional[float] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 slo=None):
         if not M.paged_decode_supported(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged serving needs attn/mlp/moe-only decoders "
@@ -185,6 +186,12 @@ class ServeEngine:
         # preemptions) always flow through an injector so they land on
         # the obs timeline with the validated fault schema
         self.injector = FaultInjector(fault_plan, registry=self.metrics)
+        # PR 9: a repro.obs.SLOMonitor closes the loop — the engine
+        # feeds it every TTFT / inter-token observation, and while the
+        # "serve_ttft" SLO burns, admission tightens to half the slots
+        # (brownout: protect in-flight latency, shed queue pressure via
+        # the existing TTFT-deadline machinery) until the burn recovers
+        self.slo = slo
 
         from repro.models import params as MP
         from repro.train.trainer import donation_supported
@@ -265,8 +272,19 @@ class ServeEngine:
 
     def _admit(self) -> None:
         free = self.kv.free_slots()
+        live = self.ecfg.max_slots - len(free)
         while free and self._waiting \
                 and self.kv.can_admit(list(self._waiting[0].prompt)):
+            if self.slo is not None and live >= 1 \
+                    and live >= max(1, self.ecfg.max_slots // 2) \
+                    and self.slo.burning("serve_ttft"):
+                # TTFT SLO burning: stop filling slots past half
+                # occupancy so in-flight prefills finish sooner; the
+                # queue drains through the deadline machinery instead of
+                # piling more concurrent work onto a latency breach
+                self.metrics.counter("serve/admission_deferred").inc(1)
+                break
+            live += 1
             req = self._waiting.popleft()
             slot = free.pop(0)
             # longest cached prefix maps in read-only; those positions are
@@ -482,6 +500,9 @@ class ServeEngine:
                     # at submit and only the FIRST ever token stops it
                     self.metrics.histogram("serve/ttft_s").observe(
                         rt.first_token_s - rt.submit_s)
+                    if self.slo is not None:
+                        self.slo.observe("serve_ttft",
+                                         rt.first_token_s - rt.submit_s)
             if s.fed >= len(s.req.prompt):          # this logit row counts
                 tok = int(sampled[i])
                 s.generated.append(tok)
@@ -492,10 +513,12 @@ class ServeEngine:
                     # inter-token gap, surviving preemption: the p99 here
                     # is what chunked prefill is buying down
                     if rt.last_token_s >= 0:
+                        gap = max(now - rt.last_token_s, 1e-7)
                         self.metrics.histogram(
                             "serve/inter_token_s",
-                            lo=1e-7, hi=3600.0).observe(
-                                max(now - rt.last_token_s, 1e-7))
+                            lo=1e-7, hi=3600.0).observe(gap)
+                        if self.slo is not None:
+                            self.slo.observe("serve_inter_token", gap)
                     rt.last_token_s = now
                 done = (len(s.generated) >= s.req.max_new
                         or (s.req.eos_id >= 0 and tok == s.req.eos_id))

@@ -77,6 +77,7 @@ from repro.core import flops as F
 from repro.core.energy.monitor import EnergyMonitor
 from repro.core.faultinject import FaultInjector, FaultPlan
 from repro.data.pipeline import make_batch_fn
+from repro.obs.health import HealthMonitor
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import get_tracer
 from repro.models import params as PM
@@ -139,6 +140,11 @@ class LocalSGDResult:
     virtual_time_s: float = 0.0              # modelled fleet wall-clock
     virtual_tokens_per_s: float = 0.0        # contributed tokens / vclock
     fault_counts: Dict[str, int] = field(default_factory=dict)
+    # ---- health-driven response accounting (PR 9) --------------------
+    health_excluded_updates: int = 0         # outer updates that went
+                                             # ahead without a detected
+                                             # straggler (quorum shrunk)
+    health_summary: Optional[Dict[str, Any]] = None
 
 
 def _outer_update(global_params: PyTree, mean_delta: PyTree,
@@ -286,7 +292,8 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                     sync_algorithm: str = "hierarchical",
                     monitor: Optional[EnergyMonitor] = None,
                     metrics: Optional[MetricsRegistry] = None,
-                    fault_plan: Optional[FaultPlan] = None
+                    fault_plan: Optional[FaultPlan] = None,
+                    health: Optional[HealthMonitor] = None
                     ) -> LocalSGDResult:
     """Run ``max(1, tc.steps // K)`` whole sync rounds of K inner steps
     per replica (``tc.steps`` rounded down to whole rounds; at least
@@ -312,6 +319,15 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     failure mode ``async_mode`` exists to fix); in async mode they also
     decide which deltas arrive late, get staleness-weighted, or are
     dropped at the bound.
+
+    ``health`` (a :class:`repro.obs.HealthMonitor`) closes the loop the
+    plan cannot: the monitor sees only *observed* durations and losses
+    (what the tracer measures — never the plan), and in async mode the
+    quorum barrier shrinks past replicas the monitor has flagged as
+    stragglers, so the fleet stops waiting for a slow device the moment
+    it is *detected* slow rather than because any oracle said so.
+    ``benchmarks/bench_health.py`` gates how much of the oracle
+    (plan-aware quorum) advantage this detection recovers.
     """
     if ls.replicas < 1 or ls.inner_steps < 1:
         raise ValueError(
@@ -344,7 +360,8 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         return _train_async(cfg, tc, ls, opt_cfg, topology=topology,
                             placement=placement,
                             sync_algorithm=sync_algorithm, metrics=metrics,
-                            fault_plan=fault_plan, quorum=Q)
+                            fault_plan=fault_plan, quorum=Q,
+                            health=health)
     opt_cfg = opt_cfg or adamw.OptConfig(
         learning_rate=3e-4, warmup_steps=max(10, tc.steps // 20),
         decay_steps=tc.steps)
@@ -438,6 +455,7 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
             # the device rejoins and redoes its work (the trajectory is
             # unchanged — that stall is exactly what async mode removes)
             dur_r = ls.inner_steps * step_times[r]
+            jit = 0.0
             if inj is not None:
                 slow = inj.plan.slowdown(r)
                 dur_r *= slow
@@ -455,6 +473,14 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                              rejoin_rounds=wait)
                     res.crashes += 1
                     dur_r *= 1 + wait
+            if health is not None:
+                # feed the monitor what the spans measure: the compute
+                # side of the round and the replica's sync/link time —
+                # sync mode still waits for everyone (that is its
+                # defining failure mode), but detection makes the
+                # launcher summary / orchestrator see the straggler
+                health.observe_step(r, dur_r - jit, ts_s=vclock)
+                health.observe_link(r, comm_round_s + jit, ts_s=vclock)
             round_dur = max(round_dur, dur_r)
 
         with tr.span("outer_sync", "local_sgd",
@@ -483,6 +509,8 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         res.losses.extend(float(x) for x in fetched["r0"])
         round_loss = float(fetched["round"])
         res.round_losses.append(round_loss / R)
+        if health is not None:
+            health.observe_loss(round_loss / R, ts_s=vclock)
         if metrics is not None:
             for x in fetched["r0"]:
                 metrics.histogram("local_sgd/loss", lo=1e-4, hi=1e4) \
@@ -510,6 +538,8 @@ def train_local_sgd(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                                     * tc.seq_len / vclock)
     if inj is not None:
         res.fault_counts = dict(inj.counts)
+    if health is not None:
+        res.health_summary = health.summary()
     if monitor is not None:
         res.energy_wh = monitor.total_wh
     if topology is not None or placement is not None:
@@ -532,12 +562,15 @@ class _Replica:
     start_version: int = 0           # global version of that snapshot
     round_idx: int = 0               # personal round counter (plan keys)
     idle: bool = False               # reported, waiting for next update
+    start_t: float = 0.0             # virtual time the round began (what
+                                     # overdue detection measures against)
 
 
 def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                  opt_cfg: Optional[adamw.OptConfig], *, topology, placement,
                  sync_algorithm: str, metrics: Optional[MetricsRegistry],
-                 fault_plan: Optional[FaultPlan], quorum: int
+                 fault_plan: Optional[FaultPlan], quorum: int,
+                 health: Optional[HealthMonitor] = None
                  ) -> LocalSGDResult:
     """Event-driven bounded-staleness async outer loop.
 
@@ -552,6 +585,15 @@ def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     Deterministic given (seed, plan): event ties break on replica id and
     every fault draw is keyed, so identical configs replay identical
     trajectories bit-for-bit.
+
+    With ``health``, the quorum barrier additionally shrinks past
+    replicas the monitor currently flags as stragglers and has no report
+    from: an update applies once every *unflagged* outstanding replica
+    (up to the configured quorum) has reported.  Detection is fed purely
+    from observed per-report durations plus overdue checks on periodic
+    health ticks — the plan never leaks into the decision — so the fleet
+    waits on a straggler exactly until the monitor has seen enough
+    evidence, then stops.  The plan keeps driving the sim underneath.
     """
     opt_cfg = opt_cfg or adamw.OptConfig(
         learning_rate=3e-4, warmup_steps=max(10, tc.steps // 20),
@@ -602,6 +644,7 @@ def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         """Begin replica r's next personal round at virtual time t."""
         rep = reps[r]
         rep.idle = False
+        rep.start_t = t
         rep.start_params = global_params
         rep.start_version = version
         slow = plan.slowdown(r)
@@ -678,6 +721,8 @@ def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
             loss_dev = loss_dev + reports[r][2]
         round_loss = float(jax.device_get(loss_dev)) / len(order)
         res.round_losses.append(round_loss)
+        if health is not None:
+            health.observe_loss(round_loss, ts_s=t)
         res.contributed_steps += sum(ks[r] for r in order)
         if metrics is not None:
             metrics.counter("local_sgd/pseudograd_bytes").inc(
@@ -692,6 +737,38 @@ def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         reports.clear()
         return t + comm_round_s
 
+    # ---- health-driven barrier (PR 9): never wait on a DETECTED
+    # straggler.  The effective quorum shrinks by the number of flagged
+    # replicas still outstanding; detection comes from observed report
+    # durations plus overdue checks on periodic ticks — the fault plan
+    # is never consulted for this decision.
+    tick_s = 0.5 * min(ks[i] * step_times[i] for i in range(R))
+    tick_pending = False
+
+    def _overdue_scan(t: float) -> None:
+        for i in range(R):
+            if not reps[i].idle and i not in reports:
+                health.check_overdue(i, t - reps[i].start_t, ts_s=t)
+
+    def _quorum_eff() -> int:
+        if health is None:
+            return quorum
+        outstanding_flagged = sum(
+            1 for i in range(R)
+            if health.is_straggler(i) and not reps[i].idle
+            and i not in reports)
+        return max(1, min(quorum, R - outstanding_flagged))
+
+    def _maybe_update(t: float) -> Optional[float]:
+        """Apply the outer update if the (health-shrunk) quorum is met;
+        returns the update completion time, else None."""
+        q_eff = _quorum_eff()
+        if not reports or len(reports) < q_eff:
+            return None
+        if q_eff < quorum:
+            res.health_excluded_updates += 1
+        return _apply_update(t)
+
     vclock = 0.0
     t0 = time.time()
     for r in range(R):
@@ -699,6 +776,27 @@ def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
     while version < rounds and events:
         t, r, kind = heapq.heappop(events)
         vclock = max(vclock, t)
+        if kind == "health_tick":
+            tick_pending = False
+            if health is not None and reports:
+                _overdue_scan(t)
+                t_up = _maybe_update(t)
+                if t_up is not None:
+                    vclock = max(vclock, t_up)
+                    if version >= rounds:
+                        break
+                    if ls.checkpoint_dir and ls.checkpoint_every_rounds \
+                            and version % ls.checkpoint_every_rounds == 0:
+                        _write_checkpoint(ls, placement, global_params,
+                                          momentum, start_round + version,
+                                          tr)
+                    for i in range(R):
+                        if reps[i].idle:
+                            _start_round(i, t_up)
+                elif not tick_pending:
+                    tick_pending = True
+                    heapq.heappush(events, (t + tick_s, -1, "health_tick"))
+            continue
         rep = reps[r]
         if kind == "rejoin":
             # the crashed device is back but its local state is gone:
@@ -724,6 +822,14 @@ def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                     dur_s=_round_dur_last(rep, ks, r, step_times, plan),
                     cat="local_sgd", track=f"replica:{r}",
                     staleness=stale, k=ks[r])
+        if health is not None:
+            # what the spans measured for this report: compute time and
+            # link time, separately (the async_round / outer_sync split)
+            jit = plan.jitter_s(r, rep.round_idx - 1)
+            health.observe_step(r, ks[r] * step_times[r] * plan.slowdown(r),
+                                ts_s=t)
+            health.observe_link(r, comm_round_s + jit, ts_s=t)
+            _overdue_scan(t)
         if stale > S:
             # past the hard bound: the delta would drag the global
             # params toward a stale point — drop it and re-sync the
@@ -739,8 +845,8 @@ def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                 res.late_merged += 1
             reports[r] = (delta, 1.0 / (1.0 + stale), last_loss)
             rep.idle = True
-            if len(reports) >= quorum:
-                t_up = _apply_update(t)
+            t_up = _maybe_update(t)
+            if t_up is not None:
                 vclock = max(vclock, t_up)
                 if version >= rounds:
                     break
@@ -751,6 +857,12 @@ def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
                 for i in range(R):
                     if reps[i].idle:
                         _start_round(i, t_up)
+            elif health is not None and not tick_pending:
+                # quorum not met: schedule an overdue check so a
+                # straggler can be detected (and the barrier shrunk)
+                # before its report ever arrives
+                tick_pending = True
+                heapq.heappush(events, (t + tick_s, -1, "health_tick"))
 
     wall = time.time() - t0
     res.rounds = version
@@ -765,6 +877,8 @@ def _train_async(cfg: ModelConfig, tc: TrainerConfig, ls: LocalSGDConfig,
         res.virtual_tokens_per_s = (res.contributed_steps * tc.batch
                                     * tc.seq_len / vclock)
     res.fault_counts = dict(inj.counts)
+    if health is not None:
+        res.health_summary = health.summary()
     if topology is not None or placement is not None:
         res.comm_time_s_per_round = comm_round_s
         res.sync_wan_bytes_per_round = wan_round

@@ -108,7 +108,8 @@ def make_jit_train_step(cfg: ModelConfig, tc: TrainerConfig,
 def train(cfg: ModelConfig, tc: TrainerConfig,
           opt_cfg: Optional[adamw.OptConfig] = None,
           monitor: Optional[EnergyMonitor] = None,
-          metrics: Optional[MetricsRegistry] = None) -> TrainerResult:
+          metrics: Optional[MetricsRegistry] = None,
+          health=None) -> TrainerResult:
     """``metrics`` opts into per-phase step-time histograms + loss /
     grad-norm distributions WITHOUT extra host syncs: device scalars
     batch in a :class:`DeviceAccumulator` and drain at the same
@@ -116,7 +117,11 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
     tracing rides the process-global tracer (``repro.obs``): a disabled
     tracer (the default) reduces every ``span`` call to one attribute
     check, keeping the zero-sync loop inside the
-    ``bench_train_step.py`` regression gate."""
+    ``bench_train_step.py`` regression gate.
+
+    ``health`` (a :class:`repro.obs.HealthMonitor`) receives every loss
+    the loop fetches — at the same sync points, never adding one — so
+    its loss-spike / divergence detector watches the run live."""
     opt_cfg = opt_cfg or adamw.OptConfig(
         learning_rate=3e-4, warmup_steps=max(10, tc.steps // 20),
         decay_steps=tc.steps)
@@ -176,6 +181,8 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
         if sync_every_step:
             host = jax.device_get(mx)               # one sync per step
             result.losses.append(float(host["loss"]))
+            if health is not None:
+                health.observe_loss(float(host["loss"]))
             if metrics is not None:
                 metrics.histogram("train/loss", lo=1e-4, hi=1e4) \
                     .observe(float(host["loss"]))
@@ -206,6 +213,9 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
                     if acc is not None:
                         acc.drain()
                 result.losses.extend(float(m["loss"]) for m in fetched)
+                if health is not None:
+                    for m in fetched:
+                        health.observe_loss(float(m["loss"]))
                 host = fetched[-1]
                 pending.clear()
             print(f"step {step:5d}  loss {float(host['loss']):.4f}  "
@@ -231,6 +241,9 @@ def train(cfg: ModelConfig, tc: TrainerConfig,
         with tr.span("metrics_drain", "train"):
             fetched = jax.device_get(pending)       # one bulk sync at exit
         result.losses.extend(float(m["loss"]) for m in fetched)
+        if health is not None:
+            for m in fetched:
+                health.observe_loss(float(m["loss"]))
     if acc is not None:
         acc.drain()
     if metrics is not None:
