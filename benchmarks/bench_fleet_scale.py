@@ -1,0 +1,330 @@
+"""Fleet-scale simulation benchmark: the 10⁵-device control plane.
+
+The claims under test (the massive-fleet perf rewrite's payoff):
+
+1. **Parity** — the vectorized paths are *bit-identical* to the scalar
+   references they replace: batched collective kernels vs the dict-
+   topology cost models (all five algorithms), batched keyed fault
+   draws vs per-entity ``default_rng`` construction, ``price_fleet_grid``
+   vs ``dtfm.plan_placement``, and the FleetSim vectorized engine vs its
+   per-entity scalar engine (whole trajectories).  0 mismatches.
+2. **Speedup** — the churn/fault sweep at 10⁴ devices is ≥50× faster
+   than the scalar per-entity path (the PR-7 draw contract, unchanged).
+3. **Scale** — a 10⁵-device topology-aware placement search plus a
+   200-round churn simulation completes under a fixed wall-clock
+   budget (search cost scales with regions, not devices).
+4. **Conclusions hold at 10⁵** — topology-aware placement beats
+   round-robin on a shuffled-arrival fleet over a slow WAN, and
+   async-quorum rounds beat fully-synchronous rounds under stragglers.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet_scale [--smoke] [--out F]
+
+Writes ``BENCH_fleet_scale.json`` — validated by ``repro.obs.validate``
+alongside the other committed artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import (BenchResult, Claim, print_result,
+                               write_bench_json)
+from repro.configs import get_config
+from repro.core.faultinject.plan import FaultPlan
+from repro.core.net import NetParams, batched_collective_cost
+from repro.core.net.collectives import collective_cost
+from repro.core.net.fleet_arrays import synthetic_fleet
+from repro.core.placement import price_fleet_grid, search_placement_fleet
+from repro.core.planner import dtfm
+from repro.core.sched.fleet_sim import FleetSim, FleetSimConfig
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_fleet_scale.json"
+
+SEQ, MB = 128, 4
+ALGORITHMS = ("ring", "tree", "hierarchical", "gossip", "allgather")
+
+PLAN = FaultPlan(seed=7, straggler_frac=0.1,
+                 straggler_slowdown=(4.0, 8.0), crash_prob=0.005,
+                 rejoin_delay=(2, 5), link_flap_prob=0.05,
+                 link_jitter_s=(0.5, 2.0))
+
+
+def _feq(a: float, b: float) -> bool:
+    return float(a) == float(b)
+
+
+# ------------------------------------------------------------------ parity
+
+def _parity_collectives(res: BenchResult) -> int:
+    """Batched kernels vs scalar cost models on overlapping groups."""
+    mism = 0
+    rng = np.random.default_rng(0)
+    checked = 0
+    for seed in (0, 1):
+        fleet = synthetic_fleet(40, region_mix="shuffled", seed=seed,
+                                params=NetParams(wan_bw_Bps=2e7))
+        topo = fleet.to_topology()
+        # overlapping random groups, caller order random (gossip keeps it)
+        member_dev: List[int] = []
+        member_grp: List[int] = []
+        groups: List[List[int]] = []
+        for g in range(6):
+            size = int(rng.integers(1, 13))
+            rows = rng.choice(fleet.num_devices, size=size, replace=False)
+            groups.append([int(r) for r in rows])
+            member_dev.extend(int(r) for r in rows)
+            member_grp.extend([g] * size)
+        nbytes = 5e7
+        for algo in ALGORITHMS:
+            b = batched_collective_cost(
+                fleet, np.asarray(member_dev), np.asarray(member_grp),
+                nbytes, algorithm=algo)
+            for g, rows in enumerate(groups):
+                nodes = [str(fleet.node_names[r]) for r in rows]
+                s = collective_cost(topo, nodes, nbytes, algorithm=algo)
+                i = b.group(g)
+                checked += 1
+                if not (_feq(b.time_s[i], s.time_s)
+                        and _feq(b.wire_bytes[i], s.wire_bytes)
+                        and _feq(b.wan_bytes[i], s.wan_bytes)):
+                    mism += 1
+                sel = b.member_group == g
+                for d, busy, byts in zip(b.member_device[sel],
+                                         b.busy_s[sel], b.bytes_dev[sel]):
+                    name = str(fleet.node_names[int(d)])
+                    if not (_feq(busy, s.per_device_busy_s[name])
+                            and _feq(byts, s.per_device_bytes[name])):
+                        mism += 1
+    res.rows.append({"check": "collectives", "compared": checked,
+                     "mismatches": mism})
+    return mism
+
+
+def _parity_faults(res: BenchResult) -> int:
+    """Batched keyed draws vs per-entity default_rng draws."""
+    mism = 0
+    ents = list(range(150)) + ["node:a", "node:b", 2 ** 33]
+    for t in (0, 3):
+        pairs = [
+            (PLAN.slowdown_batch(ents),
+             [PLAN.slowdown(e) for e in ents]),
+            (PLAN.crashes_batch(ents, t),
+             [PLAN.crashes(e, t) for e in ents]),
+            (PLAN.flaps_batch(ents, t),
+             [PLAN.flaps(e, t) for e in ents]),
+            (PLAN.jitter_batch(ents, t),
+             [PLAN.jitter_s(e, t) for e in ents]),
+            (PLAN.rejoin_after_batch(ents, t),
+             [PLAN.rejoin_after(e, t) for e in ents]),
+        ]
+        plan_c = FaultPlan(seed=7, corrupt_prob=0.2)
+        shards = list(range(40))
+        holders = [f"h{i % 5}" for i in range(40)]
+        pairs.append((plan_c.corrupts_batch(t, shards, holders),
+                      [plan_c.corrupts(t, s, h)
+                       for s, h in zip(shards, holders)]))
+        for got, want in pairs:
+            mism += int(np.sum(np.asarray(got) != np.asarray(want)))
+    res.rows.append({"check": "fault draws",
+                     "compared": 6 * 2 * len(ents), "mismatches": mism})
+    return mism
+
+
+def _parity_pricing(res: BenchResult, cfg) -> int:
+    """price_fleet_grid vs dtfm.plan_placement on the same placement."""
+    mism = 0
+    rng = np.random.default_rng(3)
+    checked = 0
+    for seed in (0, 1, 2):
+        fleet = synthetic_fleet(24, region_mix="shuffled", seed=seed,
+                                params=NetParams(wan_bw_Bps=1e7))
+        dp, S = 2, 4
+        rows = rng.choice(24, size=dp * S, replace=False)
+        grid = rows.reshape(dp, S)
+        for algo in ("ring", "hierarchical"):
+            fp = price_fleet_grid(fleet, cfg, grid, batch=16, seq_len=SEQ,
+                                  microbatches=MB, collective=algo)
+            spec = fp.to_spec(cfg)
+            p = dtfm.plan_placement(cfg, spec, batch=16, seq_len=SEQ,
+                                    microbatches=MB, collective=algo)
+            checked += 1
+            if not (_feq(fp.step_time_s, p.step_time_s)
+                    and _feq(fp.wan_bytes_per_step, p.wan_bytes_per_step)
+                    and _feq(fp.wire_bytes_per_step,
+                             p.wire_bytes_per_step)
+                    and fp.cross_region_edges
+                    == spec.cross_region_edges()):
+                mism += 1
+    res.rows.append({"check": "grid pricing", "compared": checked,
+                     "mismatches": mism})
+    return mism
+
+
+def _parity_sim(res: BenchResult) -> int:
+    """FleetSim vectorized engine ≡ per-entity scalar engine."""
+    mism = 0
+    fleet = synthetic_fleet(400, region_mix="shuffled", seed=5)
+    for mode in ("sync", "async"):
+        sim = FleetSim(fleet, FleetSimConfig(
+            rounds=12, seed=11, leave_prob=0.02, join_prob=0.3,
+            mode=mode, quorum=0.8, fault_plan=PLAN))
+        rv = sim.run("vectorized")
+        rs = sim.run("scalar")
+        if not rv.trajectory_equal(rs):
+            mism += 1
+        if rv.region_busy_s != rs.region_busy_s:
+            mism += 1
+    res.rows.append({"check": "fleet sim trajectories", "compared": 4,
+                     "mismatches": mism})
+    return mism
+
+
+# ----------------------------------------------------------------- speedup
+
+def _measure_sim(n: int, rounds: int, engine: str,
+                 mode: str = "sync", quorum: float = 0.9):
+    fleet = synthetic_fleet(n, region_mix="shuffled", seed=0)
+    cfg = FleetSimConfig(rounds=rounds, seed=2, leave_prob=0.01,
+                         join_prob=0.2, mode=mode, quorum=quorum,
+                         fault_plan=PLAN)
+    return FleetSim(fleet, cfg).run(engine)
+
+
+def _speedup(res: BenchResult, smoke: bool) -> float:
+    rounds = 5 if smoke else 20
+    sizes = [1_000, 10_000] if smoke else [1_000, 10_000, 100_000]
+    at_1e4 = {}
+    for n in sizes:
+        rv = _measure_sim(n, rounds, "vectorized")
+        res.rows.append({"fleet": n, "engine": "vectorized",
+                         "rounds": rounds, "sim_s": round(rv.elapsed_s, 3),
+                         "ms_per_round":
+                         round(rv.elapsed_s / rounds * 1e3, 2)})
+        if n <= 10_000:       # the scalar path is the point: it can't scale
+            rs = _measure_sim(n, rounds, "scalar")
+            res.rows.append({"fleet": n, "engine": "scalar",
+                             "rounds": rounds,
+                             "sim_s": round(rs.elapsed_s, 3),
+                             "ms_per_round":
+                             round(rs.elapsed_s / rounds * 1e3, 2)})
+            if n == 10_000:
+                at_1e4 = {"vec": rv.elapsed_s, "scalar": rs.elapsed_s}
+    return at_1e4["scalar"] / at_1e4["vec"]
+
+
+# ------------------------------------------------------------------- scale
+
+def _scale(res: BenchResult, cfg, smoke: bool) -> Dict[str, float]:
+    n = 20_000 if smoke else 100_000
+    rounds = 50 if smoke else 200
+    dp = n // 8
+    fleet = synthetic_fleet(n, region_mix="shuffled", seed=0,
+                            params=NetParams(wan_bw_Bps=5e6))
+
+    t0 = time.perf_counter()
+    best = search_placement_fleet(fleet, cfg, data_parallel=dp,
+                                  batch=2 * dp, seq_len=SEQ,
+                                  microbatches=MB)
+    search_s = time.perf_counter() - t0
+    rr_step = best.search_stats["round_robin_step_time_s"]
+    res.rows.append({
+        "fleet": n, "check": "placement search",
+        "search_s": round(search_s, 2),
+        "pruned": int(best.search_stats["candidates_pruned"]),
+        "ta_step_s": round(best.step_time_s, 2),
+        "rr_step_s": round(rr_step, 2),
+        "ta_wan_GB": round(best.wan_bytes_per_step / 1e9, 2),
+        "rr_wan_GB":
+        round(best.search_stats["round_robin_wan_bytes"] / 1e9, 2)})
+
+    sim_cfg = dict(rounds=rounds, seed=2, leave_prob=0.01, join_prob=0.2,
+                   fault_plan=PLAN)
+    t0 = time.perf_counter()
+    sync = FleetSim(fleet, FleetSimConfig(mode="sync",
+                                          **sim_cfg)).run("vectorized")
+    churn_s = time.perf_counter() - t0
+    asyn = FleetSim(fleet, FleetSimConfig(mode="async", quorum=0.9,
+                                          **sim_cfg)).run("vectorized")
+    for tag, r in (("sync", sync), ("async q=0.9", asyn)):
+        res.rows.append({
+            "fleet": n, "check": f"churn sim ({tag})", "rounds": rounds,
+            "sim_s": round(r.elapsed_s, 2),
+            "modeled_wall_s": round(r.wall_time_s, 1),
+            "mean_active": int(r.mean_active), "crashes": r.crashes})
+    return {"n": n, "search_s": search_s, "churn_s": churn_s,
+            "ta_rr_ratio": best.step_time_s / rr_step,
+            "sync_async_ratio": sync.wall_time_s / asyn.wall_time_s,
+            "strategy": best.strategy,
+            "pruned": int(best.search_stats["candidates_pruned"])}
+
+
+# --------------------------------------------------------------------- run
+
+def run(smoke: bool = False, out: Path = OUT) -> BenchResult:
+    res = BenchResult(name="bench_fleet_scale")
+    cfg = get_config("opt-125m")
+
+    mism = (_parity_collectives(res) + _parity_faults(res)
+            + _parity_pricing(res, cfg) + _parity_sim(res))
+    speedup = _speedup(res, smoke)
+    sc = _scale(res, cfg, smoke)
+
+    res.claims.append(Claim(
+        "vectorized fleet paths (collective kernels, keyed fault draws, "
+        "grid pricing, sim trajectories) are bit-identical to the "
+        "scalar references: 0 mismatches", mism, 0, 0))
+    res.claims.append(Claim(
+        "churn/fault sweep at 1e4 devices is >=50x faster than the "
+        "per-entity scalar path" if not smoke else
+        "churn/fault sweep at 1e4 devices beats the per-entity scalar "
+        "path (smoke: >=10x; full gate >=50x)",
+        speedup, 50.0 if not smoke else 10.0, float("inf")))
+    budget = 60.0 if smoke else 120.0
+    res.claims.append(Claim(
+        f"{sc['n']:.0e}-device topology-aware search + {200 if not smoke else 50}"
+        f"-round churn sim completes in under {budget:.0f}s wall-clock",
+        sc["search_s"] + sc["churn_s"], 0.0, budget))
+    res.claims.append(Claim(
+        "topology-aware placement beats round-robin on modeled step "
+        "time at fleet scale (shuffled arrivals, slow WAN)",
+        sc["ta_rr_ratio"], 0.0, 0.999))
+    res.claims.append(Claim(
+        "async quorum (q=0.9) beats fully-sync rounds under stragglers "
+        "at fleet scale (modeled wall ratio sync/async)",
+        sc["sync_async_ratio"], 1.5, float("inf")))
+
+    res.notes.append(
+        f"winner at {sc['n']:.0e} devices: {sc['strategy']} "
+        f"(search {sc['search_s']:.2f}s, {sc['pruned']} candidate "
+        f"orderings pruned by the O(regions) proxy ranking)")
+    res.notes.append(
+        f"speedup at 1e4 devices: {speedup:.1f}x (per-entity RNG "
+        f"construction is the scalar bottleneck the batched keyed "
+        f"streams remove)")
+
+    write_bench_json(str(out), {"scale": sc, "speedup_1e4": speedup},
+                     claims=res.claims)
+    res.notes.append(f"wrote {out.name}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller fleets / fewer rounds (CI)")
+    ap.add_argument("--out", default=str(OUT),
+                    help="where to write the JSON artifact")
+    args = ap.parse_args()
+    r = run(smoke=args.smoke, out=Path(args.out))
+    print_result(r)
+    if not r.ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,8 +14,8 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_elastic, bench_faults, bench_health,
-                        bench_placement,
+from benchmarks import (bench_elastic, bench_faults, bench_fleet_scale,
+                        bench_health, bench_placement,
                         bench_serve, bench_train_step, comm_scaling,
                         compress_ablation, fig2_scaling, fig3_idealized,
                         fig4_breakdown, fig5_offload, roofline,
@@ -39,6 +39,7 @@ MODULES = {
     "elastic": bench_elastic,
     "faults": bench_faults,
     "health": bench_health,
+    "fleet_scale": bench_fleet_scale,
 }
 
 

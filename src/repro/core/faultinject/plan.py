@@ -35,9 +35,11 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core.faultinject.keyed import keyed_streams
 
 FAULT_KINDS = ("straggle", "crash", "rejoin", "link_flap", "corrupt",
                "drop_stale", "resync", "deadline", "requeue_limit",
@@ -48,6 +50,19 @@ def _key_int(x) -> int:
     if isinstance(x, (bool, int, np.integer)):
         return int(x) & 0xFFFFFFFF
     return zlib.crc32(str(x).encode())
+
+
+def _key_col(xs) -> np.ndarray:
+    """Vector of ``_key_int`` words for a batch of entities/steps."""
+    arr = np.asarray(xs)
+    if arr.dtype.kind in "iub":
+        return (arr.astype(np.int64) & 0xFFFFFFFF).astype(np.uint32)
+    if arr.ndim == 0:
+        return np.uint32(_key_int(xs))
+    # keep original element types: np.asarray would stringify the ints
+    # of a mixed [5, "node:a"] batch and break scalar parity
+    items = xs if not isinstance(xs, np.ndarray) else arr.tolist()
+    return np.array([_key_int(x) for x in items], dtype=np.uint32)
 
 
 @dataclass(frozen=True)
@@ -118,6 +133,72 @@ class FaultPlan:
             return False
         return bool(self._rng("corrupt", step, shard, holder).random()
                     < self.corrupt_prob)
+
+    # -------------------------------------------------- batched draws
+    # One vectorized keyed-stream call per fault kind over a whole fleet,
+    # bit-identical lane-for-lane to the scalar draws above (gated by
+    # tests/test_fleet_scale.py and benchmarks/bench_fleet_scale.py).
+    # This is what lets the 10^4-10^6-device churn sweeps draw a step's
+    # masks in milliseconds instead of constructing one Generator per
+    # entity per step.
+    def _streams(self, kind: str, *cols):
+        base = [np.uint32(int(self.seed) & 0xFFFFFFFF),
+                np.uint32(zlib.crc32(kind.encode()))]
+        return keyed_streams(base + [_key_col(c) for c in cols])
+
+    def slowdown_batch(self, entities: Sequence) -> np.ndarray:
+        """Vector of :meth:`slowdown` over ``entities``."""
+        s = self._streams("straggle", entities)
+        gate = s.random()
+        lo, hi = self.straggler_slowdown
+        val = lo + (hi - lo) * s.random()
+        return np.where(gate >= self.straggler_frac, 1.0, val)
+
+    def crashes_batch(self, entities: Sequence, t: int) -> np.ndarray:
+        """Boolean mask of :meth:`crashes` over ``entities`` at ``t``."""
+        n = len(entities)
+        if self.crash_prob <= 0.0:
+            return np.zeros(n, dtype=bool)
+        return self._streams("crash", entities, t).random() \
+            < self.crash_prob
+
+    def rejoin_after_batch(self, entities: Sequence, t: int) -> np.ndarray:
+        """Vector of :meth:`rejoin_after` over ``entities`` at ``t``."""
+        lo, hi = self.rejoin_delay
+        return self._streams("rejoin", entities, t).integers(lo, hi + 1)
+
+    def flaps_batch(self, entities: Sequence, t: int) -> np.ndarray:
+        n = len(entities)
+        if self.link_flap_prob <= 0.0:
+            return np.zeros(n, dtype=bool)
+        return self._streams("flap", entities, t).random() \
+            < self.link_flap_prob
+
+    def jitter_batch(self, entities: Sequence, t: int) -> np.ndarray:
+        """Vector of :meth:`jitter_s` over ``entities`` at ``t``."""
+        flapped = self.flaps_batch(entities, t)
+        out = np.zeros(len(entities))
+        if not flapped.any():
+            return out
+        # the jitter stream only exists for flapped lanes (the scalar
+        # path opens it after the flap check) — don't pay for the rest
+        idx = np.flatnonzero(flapped)
+        sub = entities[idx] if isinstance(entities, np.ndarray) \
+            else [entities[int(i)] for i in idx]
+        lo, hi = self.link_jitter_s
+        out[idx] = lo + (hi - lo) * self._streams("jitter", sub, t).random()
+        return out
+
+    def corrupts_batch(self, step: int, shards: Sequence,
+                       holders: Sequence) -> np.ndarray:
+        """Boolean mask of :meth:`corrupts` over (shard, holder) pairs
+        written at ``step``."""
+        n = len(np.atleast_1d(np.asarray(shards)))
+        n = max(n, len(np.atleast_1d(np.asarray(holders, dtype=object))))
+        if self.corrupt_prob <= 0.0:
+            return np.zeros(n, dtype=bool)
+        return self._streams("corrupt", step, shards, holders).random() \
+            < self.corrupt_prob
 
     @property
     def active(self) -> bool:

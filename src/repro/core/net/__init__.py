@@ -1,10 +1,15 @@
 """Wide-area network model: topology graph + collective cost models."""
 
-from repro.core.net.collectives import (COLLECTIVES, CollectiveCost,
+from repro.core.net.collectives import (COLLECTIVES,
+                                        BatchedCollectiveCost,
+                                        CollectiveCost,
+                                        batched_collective_cost,
+                                        batched_sync_cost,
                                         collective_cost, gossip_average,
                                         hierarchical_allreduce,
                                         ring_allgather, ring_allreduce,
                                         sync_cost, tree_allreduce)
+from repro.core.net.fleet_arrays import FleetArrays, synthetic_fleet
 from repro.core.net.topology import (BACKBONE, Link, NetParams, Topology)
 
 __all__ = [
@@ -12,4 +17,7 @@ __all__ = [
     "COLLECTIVES", "CollectiveCost", "collective_cost",
     "ring_allreduce", "tree_allreduce", "hierarchical_allreduce",
     "gossip_average", "ring_allgather", "sync_cost",
+    "FleetArrays", "synthetic_fleet",
+    "BatchedCollectiveCost", "batched_collective_cost",
+    "batched_sync_cost",
 ]

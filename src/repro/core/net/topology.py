@@ -80,6 +80,18 @@ class Topology:
     device_region: Dict[str, str] = field(default_factory=dict)
     device_spec: Dict[str, DeviceSpec] = field(default_factory=dict)
     params: NetParams = field(default_factory=NetParams)
+    # region -> member devices, maintained incrementally: ``regions`` /
+    # ``devices_in_region`` used to rescan every device per call, which
+    # the orchestrator replan loop hit once per region per churn event
+    _region_devices: Dict[str, List[str]] = field(default_factory=dict,
+                                                  repr=False)
+
+    def __post_init__(self) -> None:
+        # constructed-from-dicts path (e.g. search's _extend_for_dp):
+        # build the index from whatever device_region already holds
+        self._region_devices = {}
+        for d, r in self.device_region.items():
+            self._region_devices.setdefault(r, []).append(d)
 
     # -------------------------------------------------------------- building
     @staticmethod
@@ -98,6 +110,13 @@ class Topology:
                       p.access_latency_s, p.access_jitter_s)
         self.links[(dev_id, r)] = access
         self.links[(r, dev_id)] = access
+        if dev_id in self.device_region:
+            old = self.device_region[dev_id]
+            if old != region:
+                self._region_devices[old].remove(dev_id)
+                self._region_devices.setdefault(region, []).append(dev_id)
+        else:
+            self._region_devices.setdefault(region, []).append(dev_id)
         self.device_region[dev_id] = region
         self.device_spec[dev_id] = spec
 
@@ -128,13 +147,11 @@ class Topology:
 
     @property
     def regions(self) -> List[str]:
-        seen: Dict[str, None] = {}
-        for r in self.device_region.values():
-            seen.setdefault(r, None)
-        return list(seen)
+        """Regions in first-device-seen order (O(R), not a device scan)."""
+        return [r for r, ds in self._region_devices.items() if ds]
 
     def devices_in_region(self, region: str) -> List[str]:
-        return [d for d, r in self.device_region.items() if r == region]
+        return list(self._region_devices.get(region, ()))
 
     def path(self, a: str, b: str) -> List[Link]:
         """Hierarchical route: same-region via router, else via backbone."""

@@ -16,9 +16,12 @@ from repro.core.placement.search import (balanced_boundaries,
                                          ordered_placement,
                                          round_robin_placement,
                                          search_placement)
+from repro.core.placement.fleet import (FleetPlacement, price_fleet_grid,
+                                        search_placement_fleet)
 
 __all__ = [
     "PlacementSpec", "StagePlacement",
     "balanced_boundaries", "ordered_placement", "round_robin_placement",
     "search_placement",
+    "FleetPlacement", "price_fleet_grid", "search_placement_fleet",
 ]

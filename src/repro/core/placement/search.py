@@ -240,8 +240,17 @@ def search_placement(cfg: ModelConfig, devices: Sequence[DeviceSpec], *,
 
     The round-robin and caller-order layouts are always candidates, so
     the result never prices worse than either on the same fleet.
+
+    Pricing is memoized on each candidate's
+    :meth:`~repro.core.placement.spec.PlacementSpec.canonical_key`:
+    different orderings frequently carve into the same (node, layers)
+    grid, and re-running the DT-FM model on them is pure waste.  The
+    winning spec's ``search_stats`` reports ``candidates_pruned`` (the
+    memo hits) alongside the totals.
     """
+    import time as _time
     from repro.core.planner import dtfm       # deferred: dtfm imports us
+    t0 = _time.perf_counter()
     if len(devices) != len(nodes):
         raise ValueError(f"{len(devices)} devices vs {len(nodes)} nodes")
     if len(devices) < data_parallel:
@@ -256,14 +265,27 @@ def search_placement(cfg: ModelConfig, devices: Sequence[DeviceSpec], *,
                             contiguous=True)
         specs.append(_spec_from_grid(cfg, grid, topology, tag, idle))
 
+    memo: Dict[tuple, tuple] = {}
+
     def price(spec: PlacementSpec):
-        p = dtfm.plan_placement(cfg, spec, batch=batch, seq_len=seq_len,
-                                microbatches=microbatches, train=train,
-                                collective=collective, compress=compress,
-                                sync_interval=sync_interval)
-        return (p.step_time_s, p.wan_bytes_per_step,
-                spec.cross_region_edges())
+        key = spec.canonical_key()
+        if key not in memo:
+            p = dtfm.plan_placement(cfg, spec, batch=batch,
+                                    seq_len=seq_len,
+                                    microbatches=microbatches,
+                                    train=train, collective=collective,
+                                    compress=compress,
+                                    sync_interval=sync_interval)
+            memo[key] = (p.step_time_s, p.wan_bytes_per_step,
+                         spec.cross_region_edges())
+        return memo[key]
 
     best = min(specs, key=price)
     best.strategy = f"topology_aware({best.strategy})"
+    best.search_stats = {
+        "candidates_total": len(specs),
+        "candidates_priced": len(memo),
+        "candidates_pruned": len(specs) - len(memo),
+        "search_wall_s": _time.perf_counter() - t0,
+    }
     return best

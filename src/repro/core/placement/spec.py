@@ -48,6 +48,10 @@ class PlacementSpec:
     # (legacy dp_regions semantics: sync is priced from different
     # regions than the pipelines compute in); empty -> groups are the
     # pipeline nodes themselves
+    search_stats: Dict[str, float] = field(default_factory=dict)
+    # ^ provenance from the search that produced this spec: candidates
+    # considered / priced / pruned (memoized or proxy-ranked away),
+    # baseline prices, wall time
 
     # ------------------------------------------------------------- shape
     @property
@@ -100,6 +104,18 @@ class PlacementSpec:
             groups.setdefault(
                 self.topology.device_region[pipe[0].node], []).append(r)
         return groups
+
+    def canonical_key(self) -> tuple:
+        """Hashable identity of the *placement itself* — per-replica
+        (node, layer-range) tuples plus any sync-group overrides.  Two
+        candidate specs with the same key price identically, which is
+        what the search memoizes on (different orderings frequently
+        carve into the same grid)."""
+        return (
+            tuple(tuple((s.node, s.layers.start, s.layers.stop)
+                        for s in pipe) for pipe in self.pipelines),
+            tuple(tuple(g) for g in self.dp_sync_nodes),
+        )
 
     def cross_region_edges(self) -> int:
         """Stage boundaries whose two devices sit in different regions,

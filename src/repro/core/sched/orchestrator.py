@@ -154,6 +154,11 @@ class Orchestrator:
             if sim.fault_plan is not None and sim.fault_plan.active \
             else None
         self._offline_until: Dict[int, int] = {}   # device -> rejoin step
+        # persistent straggler factors, filled through the batched keyed
+        # draws (bit-identical to plan.slowdown per entity) so a step
+        # over a large active set costs one vectorized call, not one
+        # Generator construction per device
+        self._slowdown: Dict[int, float] = {}
         self._step = 0
 
     def _rebuild_topology(self) -> Topology:
@@ -206,9 +211,11 @@ class Orchestrator:
         leave_p = self.sim.churn_leave_per_hour / 3600.0 * self._dt
         stay = []
         changes = 0
-        for d in self.active:
-            crashed = self.injector is not None \
-                and self.injector.plan.crashes(d.device_id, self._step)
+        crash_mask = self.injector.plan.crashes_batch(
+            [d.device_id for d in self.active], self._step) \
+            if self.injector is not None else None
+        for k, d in enumerate(self.active):
+            crashed = crash_mask is not None and bool(crash_mask[k])
             if crashed and len(self.active) > 1:
                 # injected crash: device vanishes mid-step and stays
                 # offline for its plan-drawn rejoin delay; the usual
@@ -382,16 +389,27 @@ class Orchestrator:
             if inj is not None:
                 # the synchronous pipeline is gated by its slowest
                 # member: the worst straggler stretches compute, and
-                # each flapped link adds serial jitter to the ring sync
-                for d in self.active:
-                    s_d = inj.plan.slowdown(d.device_id)
+                # each flapped link adds serial jitter to the ring sync.
+                # Both masks come from the batched keyed streams — one
+                # vectorized draw over the active set, lane-identical to
+                # the per-entity scalar draws
+                ids = [d.device_id for d in self.active]
+                missing = [i for i in ids if i not in self._slowdown]
+                if missing:
+                    self._slowdown.update(zip(
+                        missing,
+                        (float(v) for v in
+                         inj.plan.slowdown_batch(missing))))
+                jit = inj.plan.jitter_batch(ids, steps)
+                for k, d in enumerate(self.active):
+                    s_d = self._slowdown[d.device_id]
                     if s_d > 1.0 and d.device_id not in straggle_announced:
                         straggle_announced.add(d.device_id)
                         inj.emit("straggle", d.device_id, ts_s=t,
                                  slowdown=round(s_d, 3))
                     slow = max(slow, s_d)
                     dev_slow[d.device_id] = s_d
-                    j = inj.plan.jitter_s(d.device_id, steps)
+                    j = float(jit[k])
                     if j > 0.0:
                         inj.emit("link_flap", d.device_id, ts_s=t,
                                  step=steps, jitter_s=round(j, 3))

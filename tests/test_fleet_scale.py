@@ -1,0 +1,433 @@
+"""Fleet-scale vectorization: bit-exactness against the scalar references.
+
+The massive-fleet engine only earns its speedups if the array paths are
+*exactly* the scalar paths — every float identical, every draw identical
+— so experiments at 10² devices (where the scalar code runs) transfer
+verbatim to 10⁵ (where it can't).  These tests pin that contract
+property-style across random topologies, group shapes, and seeds:
+
+* keyed RNG lanes ≡ ``np.random.default_rng([...])`` per entity, with
+  ``random()`` / bounded ``integers()`` draws freely interleaved,
+* batched fault draws ≡ the per-entity stateless draws (PR-7 contract),
+* batched collective kernels ≡ the dict-topology cost models (all five
+  algorithms, per-group totals AND per-member busy/bytes),
+* ``price_fleet_grid`` ≡ ``dtfm.plan_placement`` on the equivalent spec,
+* FleetSim's vectorized engine ≡ its per-entity scalar engine (whole
+  churn trajectories),
+
+plus the satellite guarantees: the hierarchical search never prices
+worse than round-robin, the scalar search memoizes duplicate candidate
+grids (``candidates_pruned``), and the topology's region index stays
+consistent under mutation.  Hypothesis drives the sweeps where
+installed; containers without it run seeded sweeps over the same
+parameter space instead of skipping.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.energy.devices import LAPTOP_M2PRO, SMARTPHONE_SD888
+from repro.core.faultinject.keyed import keyed_streams
+from repro.core.faultinject.plan import FaultPlan
+from repro.core.net import NetParams, Topology
+from repro.core.net.collectives import (batched_collective_cost,
+                                        batched_sync_cost,
+                                        collective_cost, sync_cost)
+from repro.core.net.fleet_arrays import FleetArrays, synthetic_fleet
+from repro.core.placement import (price_fleet_grid, search_placement,
+                                  search_placement_fleet)
+from repro.core.planner import dtfm
+from repro.core.sched.fleet_sim import FleetSim, FleetSimConfig
+
+CFG = get_config("opt-125m")
+ALGORITHMS = ("ring", "tree", "hierarchical", "gossip", "allgather")
+REGIONS = ("europe", "north_america", "east_asia", "nordics")
+
+
+# --------------------------------------------------------------------------- #
+# Keyed RNG lanes vs np.random.default_rng
+# --------------------------------------------------------------------------- #
+
+def _exercise_keyed(seed: int, lanes: int = 11, draws: int = 10):
+    rng = np.random.RandomState(seed)
+    ncols = int(rng.randint(2, 6))
+    cols = [rng.randint(0, 2 ** 31, size=lanes).astype(np.uint32)
+            for _ in range(ncols)]
+    s = keyed_streams(cols)
+    refs = [np.random.default_rng([int(c[i]) for c in cols])
+            for i in range(lanes)]
+    for _ in range(draws):
+        if rng.randint(2) == 0:
+            got = s.random()
+            want = np.array([r.random() for r in refs])
+        else:
+            lo = int(rng.randint(-3, 4))
+            hi = lo + int(rng.randint(1, 60))
+            got = s.integers(lo, hi)
+            want = np.array([int(r.integers(lo, hi)) for r in refs])
+        assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_keyed_streams_match_default_rng(seed):
+    _exercise_keyed(seed)
+
+
+def test_keyed_streams_hypothesis():
+    try:
+        import hypothesis as hyp
+        from hypothesis import strategies as st
+    except ImportError:
+        rng = np.random.RandomState(99)
+        for _ in range(15):
+            _exercise_keyed(int(rng.randint(0, 2 ** 16)),
+                            lanes=int(rng.randint(1, 33)))
+        return
+
+    @hyp.given(seed=st.integers(0, 2 ** 16), lanes=st.integers(1, 32))
+    @hyp.settings(max_examples=15, deadline=None)
+    def prop(seed, lanes):
+        _exercise_keyed(seed, lanes=lanes)
+
+    prop()
+
+
+# --------------------------------------------------------------------------- #
+# Batched fault draws vs per-entity stateless draws
+# --------------------------------------------------------------------------- #
+
+def _exercise_fault_draws(seed: int):
+    rng = np.random.RandomState(seed)
+    plan = FaultPlan(seed=int(rng.randint(0, 1000)),
+                     straggler_frac=float(rng.uniform(0.05, 0.5)),
+                     crash_prob=float(rng.uniform(0.01, 0.3)),
+                     rejoin_delay=(1, int(rng.randint(2, 8))),
+                     link_flap_prob=float(rng.uniform(0.01, 0.4)),
+                     corrupt_prob=float(rng.uniform(0.05, 0.5)))
+    n = int(rng.randint(5, 60))
+    # mixed entity kinds in one batch — ints and node-name strings
+    ents = [int(i) for i in range(n // 2)] \
+        + [f"node:{i}" for i in range(n - n // 2)]
+    t = int(rng.randint(0, 50))
+    assert np.array_equal(plan.slowdown_batch(ents),
+                          [plan.slowdown(e) for e in ents])
+    assert np.array_equal(plan.crashes_batch(ents, t),
+                          [plan.crashes(e, t) for e in ents])
+    assert np.array_equal(plan.flaps_batch(ents, t),
+                          [plan.flaps(e, t) for e in ents])
+    assert np.array_equal(plan.jitter_batch(ents, t),
+                          [plan.jitter_s(e, t) for e in ents])
+    assert np.array_equal(plan.rejoin_after_batch(ents, t),
+                          [plan.rejoin_after(e, t) for e in ents])
+    shards = [int(x) for x in rng.randint(0, 30, size=n)]
+    holders = [f"h{int(x)}" for x in rng.randint(0, 5, size=n)]
+    assert np.array_equal(
+        plan.corrupts_batch(t, shards, holders),
+        [plan.corrupts(t, s, h) for s, h in zip(shards, holders)])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fault_draws_batch_scalar_parity(seed):
+    _exercise_fault_draws(seed)
+
+
+def test_fault_draws_hypothesis():
+    try:
+        import hypothesis as hyp
+        from hypothesis import strategies as st
+    except ImportError:
+        rng = np.random.RandomState(7)
+        for _ in range(10):
+            _exercise_fault_draws(int(rng.randint(0, 2 ** 16)))
+        return
+
+    @hyp.given(seed=st.integers(0, 2 ** 16))
+    @hyp.settings(max_examples=10, deadline=None)
+    def prop(seed):
+        _exercise_fault_draws(seed)
+
+    prop()
+
+
+# --------------------------------------------------------------------------- #
+# Batched collective kernels vs scalar cost models
+# --------------------------------------------------------------------------- #
+
+def _random_fleet(rng, n_lo=6, n_hi=36) -> FleetArrays:
+    n = int(rng.randint(n_lo, n_hi))
+    k = int(rng.randint(1, 5))
+    return synthetic_fleet(
+        n, regions=REGIONS[:k],
+        region_mix="shuffled" if rng.randint(2) else "round_robin",
+        params=NetParams(wan_bw_Bps=float(rng.choice([5e6, 2e7, 1e8]))),
+        seed=int(rng.randint(0, 1000)))
+
+
+def _exercise_collectives(seed: int):
+    rng = np.random.RandomState(seed)
+    fleet = _random_fleet(rng)
+    topo = fleet.to_topology()
+    member_dev, member_grp, groups = [], [], []
+    for g in range(int(rng.randint(1, 6))):
+        size = int(rng.randint(1, min(12, fleet.num_devices) + 1))
+        rows = rng.choice(fleet.num_devices, size=size, replace=False)
+        groups.append([int(r) for r in rows])        # caller order kept
+        member_dev.extend(int(r) for r in rows)
+        member_grp.extend([g] * size)
+    nbytes = float(rng.choice([1e6, 5e7, 2e9]))
+    for algo in ALGORITHMS:
+        b = batched_collective_cost(fleet, np.asarray(member_dev),
+                                    np.asarray(member_grp), nbytes,
+                                    algorithm=algo)
+        for g, rows in enumerate(groups):
+            nodes = [str(fleet.node_names[r]) for r in rows]
+            s = collective_cost(topo, nodes, nbytes, algorithm=algo)
+            i = b.group(g)
+            assert b.time_s[i] == s.time_s, (algo, g)
+            assert b.wire_bytes[i] == s.wire_bytes, (algo, g)
+            assert b.wan_bytes[i] == s.wan_bytes, (algo, g)
+            assert int(b.participants[i]) == s.participants
+            sel = b.member_group == g
+            for d, busy, byts in zip(b.member_device[sel], b.busy_s[sel],
+                                     b.bytes_dev[sel]):
+                name = str(fleet.node_names[int(d)])
+                assert busy == s.per_device_busy_s[name], (algo, g, name)
+                assert byts == s.per_device_bytes[name], (algo, g, name)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_batched_collectives_match_scalar(seed):
+    _exercise_collectives(seed)
+
+
+def test_batched_collectives_hypothesis():
+    try:
+        import hypothesis as hyp
+        from hypothesis import strategies as st
+    except ImportError:
+        rng = np.random.RandomState(42)
+        for _ in range(10):
+            _exercise_collectives(int(rng.randint(0, 2 ** 16)))
+        return
+
+    @hyp.given(seed=st.integers(0, 2 ** 16))
+    @hyp.settings(max_examples=10, deadline=None)
+    def prop(seed):
+        _exercise_collectives(seed)
+
+    prop()
+
+
+def test_batched_sync_cost_matches_scalar():
+    rng = np.random.RandomState(0)
+    fleet = _random_fleet(rng, n_lo=12, n_hi=13)
+    topo = fleet.to_topology()
+    dev = np.arange(12)
+    grp = np.repeat(np.arange(3), 4)
+    for k in (1, 4):
+        b = batched_sync_cost(fleet, dev, grp, 10_000_000,
+                              algorithm="hierarchical", dtype_bytes=2,
+                              sync_interval=k)
+        for g in range(3):
+            nodes = [str(fleet.node_names[r]) for r in dev[grp == g]]
+            s = sync_cost(topo, nodes, 10_000_000,
+                          algorithm="hierarchical", dtype_bytes=2,
+                          sync_interval=k)
+            i = b.group(g)
+            assert b.time_s[i] == s.time_s
+            assert b.wire_bytes[i] == s.wire_bytes
+            assert b.wan_bytes[i] == s.wan_bytes
+
+
+# --------------------------------------------------------------------------- #
+# Vectorized grid pricing vs dtfm.plan_placement
+# --------------------------------------------------------------------------- #
+
+def _exercise_pricing(seed: int):
+    rng = np.random.RandomState(seed)
+    fleet = _random_fleet(rng, n_lo=12, n_hi=28)
+    dp = int(rng.choice([1, 2, 4]))
+    S = int(rng.randint(2, 5))
+    if dp * S > fleet.num_devices:
+        dp, S = 2, 2
+    rows = rng.choice(fleet.num_devices, size=dp * S, replace=False)
+    grid = rows.reshape(dp, S)
+    algo = str(rng.choice(["ring", "hierarchical", "tree"]))
+    k = int(rng.choice([1, 2]))
+    fp = price_fleet_grid(fleet, CFG, grid, batch=16, seq_len=128,
+                          microbatches=4, collective=algo,
+                          sync_interval=k)
+    spec = fp.to_spec(CFG)
+    p = dtfm.plan_placement(CFG, spec, batch=16, seq_len=128,
+                            microbatches=4, collective=algo,
+                            sync_interval=k)
+    assert fp.step_time_s == p.step_time_s
+    assert fp.wan_bytes_per_step == p.wan_bytes_per_step
+    assert fp.wire_bytes_per_step == p.wire_bytes_per_step
+    assert fp.cross_region_edges == spec.cross_region_edges()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_price_fleet_grid_matches_plan_placement(seed):
+    _exercise_pricing(seed)
+
+
+def test_price_fleet_grid_hypothesis():
+    try:
+        import hypothesis as hyp
+        from hypothesis import strategies as st
+    except ImportError:
+        rng = np.random.RandomState(17)
+        for _ in range(8):
+            _exercise_pricing(int(rng.randint(0, 2 ** 16)))
+        return
+
+    @hyp.given(seed=st.integers(0, 2 ** 16))
+    @hyp.settings(max_examples=8, deadline=None)
+    def prop(seed):
+        _exercise_pricing(seed)
+
+    prop()
+
+
+# --------------------------------------------------------------------------- #
+# Hierarchical fleet search: soundness + provenance
+# --------------------------------------------------------------------------- #
+
+def test_fleet_search_never_worse_than_round_robin():
+    fleet = synthetic_fleet(64, region_mix="shuffled",
+                            params=NetParams(wan_bw_Bps=5e6), seed=2)
+    best = search_placement_fleet(fleet, CFG, data_parallel=4,
+                                  batch=16, seq_len=128, microbatches=4)
+    stats = best.search_stats
+    assert best.step_time_s <= stats["round_robin_step_time_s"]
+    assert stats["candidates_pruned"] >= 0
+    assert stats["candidates_priced"] <= stats["candidates_total"]
+    # the winner reprices identically through the scalar model
+    spec = best.to_spec(CFG)
+    p = dtfm.plan_placement(CFG, spec, batch=16, seq_len=128,
+                            microbatches=4, collective="hierarchical")
+    assert p.step_time_s == best.step_time_s
+    assert p.wan_bytes_per_step == best.wan_bytes_per_step
+    assert spec.search_stats == stats       # provenance rides the spec
+
+
+def test_scalar_search_memoizes_duplicate_grids():
+    """A uniform single-region fleet makes every candidate ordering
+    carve into the same grid — the memo must collapse them and report
+    the collapse in ``candidates_pruned``."""
+    devices = [LAPTOP_M2PRO] * 4
+    topo = Topology.from_specs(devices)
+    nodes = [str(i) for i in range(4)]
+    spec = search_placement(CFG, devices, topology=topo, nodes=nodes,
+                            data_parallel=2, batch=8, seq_len=64,
+                            microbatches=2)
+    stats = spec.search_stats
+    assert stats["candidates_total"] > stats["candidates_priced"]
+    assert stats["candidates_pruned"] > 0
+    assert stats["candidates_pruned"] == (stats["candidates_total"]
+                                          - stats["candidates_priced"])
+
+
+def test_heterogeneous_search_still_reports_stats():
+    devices = [LAPTOP_M2PRO, SMARTPHONE_SD888] * 2
+    topo = Topology.from_specs(devices,
+                               regions=["europe", "north_america"])
+    nodes = [str(i) for i in range(4)]
+    spec = search_placement(CFG, devices, topology=topo, nodes=nodes,
+                            data_parallel=2, batch=8, seq_len=64,
+                            microbatches=2)
+    assert spec.search_stats["candidates_total"] >= 2
+    assert "search_wall_s" in spec.search_stats
+
+
+# --------------------------------------------------------------------------- #
+# FleetSim: scalar engine ≡ vectorized engine
+# --------------------------------------------------------------------------- #
+
+def _exercise_sim(seed: int, n: int = 200, rounds: int = 8):
+    rng = np.random.RandomState(seed)
+    plan = FaultPlan(seed=int(rng.randint(0, 100)),
+                     straggler_frac=0.15, crash_prob=0.02,
+                     rejoin_delay=(1, 4), link_flap_prob=0.1)
+    cfg = FleetSimConfig(
+        rounds=rounds, seed=int(rng.randint(0, 100)),
+        leave_prob=float(rng.uniform(0, 0.05)),
+        join_prob=float(rng.uniform(0, 0.5)),
+        mode="async" if rng.randint(2) else "sync",
+        quorum=float(rng.uniform(0.5, 1.0)), fault_plan=plan)
+    fleet = synthetic_fleet(n, region_mix="shuffled",
+                            seed=int(rng.randint(0, 100)))
+    sim = FleetSim(fleet, cfg)
+    rv = sim.run("vectorized")
+    rs = sim.run("scalar")
+    assert rv.trajectory_equal(rs)
+    assert rv.region_busy_s == rs.region_busy_s
+    assert rv.wall_time_s == rs.wall_time_s
+    assert rv.rounds == rounds and (rv.active_counts > 0).all()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_fleet_sim_engines_bit_identical(seed):
+    _exercise_sim(seed)
+
+
+def test_fleet_sim_hypothesis():
+    try:
+        import hypothesis as hyp
+        from hypothesis import strategies as st
+    except ImportError:
+        rng = np.random.RandomState(5)
+        for _ in range(6):
+            _exercise_sim(int(rng.randint(0, 2 ** 16)),
+                          n=int(rng.randint(20, 300)))
+        return
+
+    @hyp.given(seed=st.integers(0, 2 ** 16), n=st.integers(20, 300))
+    @hyp.settings(max_examples=6, deadline=None)
+    def prop(seed, n):
+        _exercise_sim(seed, n=n)
+
+    prop()
+
+
+def test_fleet_sim_async_quorum_cuts_straggler_tail():
+    plan = FaultPlan(seed=3, straggler_frac=0.2,
+                     straggler_slowdown=(4.0, 8.0))
+    fleet = synthetic_fleet(500, seed=1)
+    base = dict(rounds=10, seed=4, fault_plan=plan)
+    sync = FleetSim(fleet, FleetSimConfig(mode="sync", **base)).run()
+    asyn = FleetSim(fleet, FleetSimConfig(mode="async", quorum=0.75,
+                                          **base)).run()
+    assert asyn.wall_time_s < sync.wall_time_s
+
+
+# --------------------------------------------------------------------------- #
+# Topology region index + FleetArrays round-trip
+# --------------------------------------------------------------------------- #
+
+def test_topology_region_index_tracks_mutation():
+    topo = Topology()
+    topo.add_device("a", "europe", LAPTOP_M2PRO)
+    topo.add_device("b", "europe", SMARTPHONE_SD888)
+    topo.add_device("c", "asia", LAPTOP_M2PRO)
+    assert topo.regions == ["europe", "asia"]
+    assert topo.devices_in_region("europe") == ["a", "b"]
+    topo.add_device("b", "asia", SMARTPHONE_SD888)   # region move
+    assert topo.devices_in_region("europe") == ["a"]
+    assert sorted(topo.devices_in_region("asia")) == ["b", "c"]
+    # the index is exactly the inverse of device_region
+    for r in topo.regions:
+        for d in topo.devices_in_region(r):
+            assert topo.device_region[d] == r
+
+
+def test_fleet_arrays_topology_round_trip():
+    fleet = synthetic_fleet(30, region_mix="shuffled", seed=9)
+    back = FleetArrays.from_topology(fleet.to_topology())
+    assert np.array_equal(fleet.node_names, back.node_names)
+    assert np.array_equal(fleet.region_of, back.region_of)
+    assert np.array_equal(fleet.eff_flops, back.eff_flops)
+    assert np.array_equal(fleet.acc_bw, back.acc_bw)
+    assert np.array_equal(fleet.wan_bw, back.wan_bw)
